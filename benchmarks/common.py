@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall-time of a jitted callable (blocks on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def save_json(name: str, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,73 @@
+"""Paper Figure 2: BDCD vs s-step BDCD convergence (relative solution
+error vs the closed-form K-RR solution) on abalone-like (b=128) and
+bodyfat-like (b=64) datasets, s in {16, 256}.
+
+Claim validated: s-step BDCD attains the same solution as BDCD at every
+round and is numerically stable even for b >> 1 and s = 256."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KernelConfig, KRRConfig, bdcd_krr, block_schedule,
+                        krr_closed_form, relative_solution_error,
+                        sstep_bdcd_krr)
+from repro.data.synthetic import regression_dataset
+
+from .common import emit, save_json, timeit
+
+KERNELS = [KernelConfig("linear"), KernelConfig("polynomial", 3, 0.0),
+           KernelConfig("rbf", sigma=1.0)]
+
+
+def run(fast: bool = False):
+    # paper Table 2 scales; abalone shrunk in fast mode.  NOTE: the
+    # paper's (b=128, s=256) MATLAB setting implies (s*b)^2 = 32768^2
+    # correction tensors (~17 GB fp64) — beyond this container, so the
+    # large-s run uses b=32 (s*b = 8192) and the large-b run uses s<=16;
+    # both stability claims (s>>1, b>>1) are still exercised.
+    datasets = {
+        "abalone-like-b128": ((512, 8) if fast else (4177, 8), 128, (16,)),
+        "abalone-like-b32": ((512, 8) if fast else (4177, 8), 32,
+                             (16, 256)),
+        "bodyfat-like": ((252, 14), 64, (16, 256)),
+    }
+    results = []
+    with jax.enable_x64(True):
+        for dname, ((m, n), b, s_values) in datasets.items():
+            A, y = regression_dataset(jax.random.key(2), m, n,
+                                      dtype=jnp.float64)
+            cfg0 = KRRConfig(lam=1.0)
+            H = 256 if fast else 512
+            sched = block_schedule(jax.random.key(3), H, m, b)
+            a0 = jnp.zeros(m, jnp.float64)
+            for kern in KERNELS:
+                cfg = KRRConfig(lam=1.0, kernel=kern)
+                astar = krr_closed_form(A, y, cfg)
+                t_ref = timeit(lambda: bdcd_krr(A, y, a0, sched, cfg)[0],
+                               iters=1)
+                a_ref, _ = bdcd_krr(A, y, a0, sched, cfg)
+                err_ref = float(relative_solution_error(a_ref, astar))
+                row = {"dataset": dname, "kernel": kern.name, "b": b,
+                       "H": H, "bdcd_relerr": err_ref,
+                       "bdcd_time_s": t_ref, "sstep": {}}
+                for s in s_values:
+                    if H % s:
+                        continue
+                    t_s = timeit(lambda s=s: sstep_bdcd_krr(
+                        A, y, a0, sched, cfg, s=s)[0], iters=1)
+                    a_s, _ = sstep_bdcd_krr(A, y, a0, sched, cfg, s=s)
+                    err_s = float(relative_solution_error(a_s, astar))
+                    dev = float(jnp.max(jnp.abs(a_s - a_ref)))
+                    row["sstep"][s] = {"relerr": err_s,
+                                       "max_dev_from_bdcd": dev,
+                                       "time_s": t_s}
+                    emit(f"fig2/{dname}/{kern.name}/b={b}/s={s}",
+                         t_s * 1e6, f"relerr={err_s:.2e};dev={dev:.2e}")
+                results.append(row)
+    save_json("fig2_bdcd_convergence.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

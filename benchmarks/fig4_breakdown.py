@@ -1,0 +1,79 @@
+"""Paper Figure 4/7: running-time breakdown (kernel computation, allreduce,
+gradient correction, memory reset) of DCD/s-step DCD, from the calibrated
+Hockney model at the paper's P values, plus the measured on-host split
+between slab computation and inner-loop correction."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import KernelConfig, SVMConfig, coordinate_schedule, \
+    sstep_dcd_ksvm
+from repro.core.kernels import gram_slab
+from repro.core.perf_model import Machine, Problem
+from repro.data.synthetic import classification_dataset
+
+from .common import emit, save_json, timeit
+
+
+def modeled_breakdown(P=128, H=4096):
+    mach = Machine()
+    out = []
+    for dname, (m, n, f) in {
+        "colon-like": (62, 2000, 1.0),
+        "duke-like": (44, 7129, 1.0),
+        "news20-like": (19996, 1355191, 0.0003),
+    }.items():
+        for s in (1, 8, 32, 256):
+            rounds = H / s
+            kernel_flops = rounds * (s * f * m * n / P + mach.mu * s * m)
+            correction_flops = rounds * math.comb(s, 2)
+            t_kernel = mach.gamma * kernel_flops
+            t_corr = mach.gamma * correction_flops
+            t_band = mach.beta * H * m          # total words identical
+            t_lat = mach.phi * rounds * math.log2(P)
+            out.append({"dataset": dname, "P": P, "s": s,
+                        "t_kernel": t_kernel, "t_correction": t_corr,
+                        "t_allreduce_band": t_band, "t_allreduce_lat": t_lat,
+                        "total": t_kernel + t_corr + t_band + t_lat})
+            emit(f"fig4/model/{dname}/s={s}",
+                 (t_kernel + t_corr + t_band + t_lat) * 1e6,
+                 f"lat_frac={t_lat / (t_kernel + t_corr + t_band + t_lat):.2f}")
+    return out
+
+
+def measured_slab_vs_inner(fast=False):
+    """On-host: time the slab (gram) vs the full s-step round — the
+    difference is the inner correction loop (paper's 'gradient correction
+    overhead grows with s')."""
+    m, n = (44, 1024) if fast else (44, 7129)
+    A, y = classification_dataset(jax.random.key(0), m, n)
+    cfg = SVMConfig(C=1.0, loss="l2", kernel=KernelConfig("rbf"))
+    out = []
+    for s in (16, 64, 256):
+        H = s * 4
+        sched = coordinate_schedule(jax.random.key(1), H, m)
+        a0 = jnp.zeros(m)
+        Atil = y[:, None] * A
+        idx = sched[:s]
+        t_slab = timeit(lambda: gram_slab(Atil, Atil[idx], cfg.kernel))
+        t_round = timeit(lambda s=s: sstep_dcd_ksvm(A, y, a0, sched, cfg,
+                                                    s=s)[0]) / (H / s)
+        out.append({"s": s, "t_slab_s": t_slab, "t_round_s": t_round,
+                    "inner_frac": max(0.0, 1 - t_slab / t_round)})
+        emit(f"fig4/measured/slab_vs_round/s={s}", t_round * 1e6,
+             f"slab={t_slab * 1e6:.0f}us")
+    return out
+
+
+def run(fast: bool = False):
+    results = {"modeled": modeled_breakdown(),
+               "measured": measured_slab_vs_inner(fast)}
+    save_json("fig4_breakdown.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

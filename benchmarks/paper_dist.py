@@ -1,0 +1,83 @@
+"""§Perf-paper: collective schedule of the paper's own solvers on the
+production mesh, measured from the lowered programs.
+
+Variants:
+  classical-1D : BDCD, one psum of (m x b) words EVERY iteration (paper)
+  sstep-1D     : s-step BDCD, one psum of (m x s*b) every s iterations
+                 (the paper's contribution)
+  sstep-2D     : beyond-paper samples x features partition — the slab
+                 psum shrinks to (m/P_data x s*b) per device
+
+Metrics: collective executions per solve (jaxpr, trip-count aware) and
+collective bytes per outer round (HLO text of the round body).
+Runs in-process on a (4 data x 4 model) host mesh = 16 devices.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=16 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import json          # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import KernelConfig, KRRConfig, block_schedule  # noqa: E402
+from repro.core.distributed import (dist_bdcd_krr, dist_sstep_bdcd_krr,
+                                    dist_sstep_bdcd_krr_2d)  # noqa: E402
+from repro.data.synthetic import regression_dataset  # noqa: E402
+from repro.launch.hlo_analysis import collective_bytes  # noqa: E402
+from repro.launch.jaxpr_analysis import count_collective_executions  # noqa: E402
+
+
+def run(fast: bool = False):
+    import sys
+    fast = fast or "--fast" in sys.argv
+    # The 2D layout trades the (m x sb) slab psum for a (n/Pm x sb)
+    # sampled-row gather + (m/Pd x sb) slab: it wins iff m(1-1/Pd) >
+    # n/Pm + sb.  Measure BOTH regimes:
+    datasets = {
+        "tall (abalone-like m>>n)": (1024, 64) if fast else (4096, 64),
+        "wide (duke-like n>>m)": (256, 2048) if fast else (2048, 8192),
+    }
+    b, s, H = 4, 16, 64
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    out = {}
+    for dname, (m, n) in datasets.items():
+        A, y = regression_dataset(jax.random.key(0), m, n)
+        cfg = KRRConfig(lam=1.0, kernel=KernelConfig("rbf"))
+        sched = block_schedule(jax.random.key(1), H, m, b)
+        a0 = jnp.zeros(m)
+        variants = {
+            "classical-1D": partial(dist_bdcd_krr, mesh, A, y, a0, sched,
+                                    cfg),
+            "sstep-1D": partial(dist_sstep_bdcd_krr, mesh, A, y, a0,
+                                sched, cfg, s),
+            "sstep-2D": partial(dist_sstep_bdcd_krr_2d, mesh, A, y, a0,
+                                sched, cfg, s),
+        }
+        ref = None
+        for name, fn in variants.items():
+            jaxpr = jax.make_jaxpr(lambda: fn())()
+            execs = count_collective_executions(jaxpr)
+            hlo = jax.jit(lambda: fn()).lower().compile().as_text()
+            per_kind = collective_bytes(hlo)  # body once = per round
+            alpha = fn()
+            if ref is None:
+                ref = alpha
+            dev = float(jnp.max(jnp.abs(alpha - ref)))
+            out[f"{dname}/{name}"] = {
+                "collective_executions_per_solve": execs,
+                "collective_bytes_per_round": per_kind,
+                "bytes_per_round_total": sum(per_kind.values()),
+                "max_dev_from_classical": dev,
+            }
+            print(f"paper_dist/{dname}/{name},0.0,execs={execs};"
+                  f"bytes/round={sum(per_kind.values())};dev={dev:.1e}")
+    from .common import save_json
+    save_json("paper_dist.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Roofline table assembly: reads the dry-run JSON artifacts and renders
+the EXPERIMENTS.md §Roofline table (all three terms, bottleneck, useful
+flop ratio, one-line remedy per cell)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import RESULTS_DIR, emit
+
+REMEDY = {
+    "t_compute": "raise MXU utilization: larger per-device tiles / fewer "
+                 "recompute passes (remat policy)",
+    "t_memory": "cut HBM traffic: fused/blocked attention (avoid O(S^2) "
+                "logit materialization), bf16 master-less optimizer reads",
+    "t_collective": "defer/batch collectives (paper s-step schedule), "
+                    "overlap psum with compute, shard logits reduction",
+}
+
+
+def load(name):
+    path = os.path.join(RESULTS_DIR, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(results, title):
+    lines = [f"### {title}", "",
+             "| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | "
+             "bottleneck | MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"skipped: {r['reason'][:40]}... | - | - |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED "
+                         f"{r.get('error', '')[:60]} | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3g} | "
+            f"{r['t_memory']:.3g} | {r['t_collective']:.3g} | "
+            f"{r['bottleneck'][2:]} | {r['useful_flop_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def run(fast: bool = False):
+    for name, title in (
+            ("dryrun_single.json", "Single pod (16x16) — faithful baseline"),
+            ("dryrun_multi.json", "Multi-pod (2x16x16) — faithful baseline"),
+            ("dryrun_single_optimized.json",
+             "Single pod (16x16) — optimized (SPerf defaults)"),
+            ("dryrun_multi_optimized.json",
+             "Multi-pod (2x16x16) — optimized (SPerf defaults)")):
+        results = load(name)
+        if results is None:
+            emit(f"roofline/{name}", 0.0, "missing (dry-run not yet run)")
+            continue
+        print(render(results, title))
+        ok = [r for r in results if r["status"] == "ok"]
+        emit(f"roofline/{name}", 0.0,
+             f"{len(ok)} ok cells; "
+             f"worst_frac={min((r['roofline_fraction'] for r in ok), default=0):.3f}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Benchmark harness: one entry per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
+
+  fig1   DCD vs s-step DCD convergence (duality gap)        [paper Fig 1]
+  fig2   BDCD vs s-step BDCD convergence (rel. error)       [paper Fig 2]
+  fig3   strong scaling, measured + Hockney-modeled         [paper Figs 3/5/6]
+  fig4   running-time breakdown                             [paper Figs 4/7/8]
+  table4 block-size ablation                                [paper Table 4]
+  roofline  assigned-arch roofline table from the dry-run   [EXPERIMENTS §Roofline]
+
+``--fast`` shrinks datasets/iterations (used by CI / test_system).
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig1,table4")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_dcd_convergence, fig2_bdcd_convergence,
+                            fig3_scaling, fig4_breakdown, roofline,
+                            table4_blocksize)
+
+    def paper_dist_subprocess(fast=False):
+        # needs its own process: it forces a 16-device host platform
+        import os
+        import pathlib
+        import subprocess
+        root = pathlib.Path(__file__).resolve().parents[1]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = f"{root / 'src'}:{root}"
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.paper_dist"]
+            + (["--fast"] if fast else []),
+            env=env, cwd=str(root), capture_output=True, text=True,
+            timeout=1800)
+        print(out.stdout, end="")
+        if out.returncode != 0:
+            raise RuntimeError(out.stderr[-2000:])
+
+    suites = {
+        "fig1": fig1_dcd_convergence.run,
+        "fig2": fig2_bdcd_convergence.run,
+        "fig3": fig3_scaling.run,
+        "fig4": fig4_breakdown.run,
+        "table4": table4_blocksize.run,
+        "paper_dist": paper_dist_subprocess,
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    failed = []
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        print(f"==== {name} ====", flush=True)
+        try:
+            fn(fast=args.fast)
+        except Exception as e:  # pragma: no cover
+            failed.append(name)
+            print(f"{name},FAILED,{type(e).__name__}: {e}", flush=True)
+    if failed:
+        sys.exit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,59 @@
+"""Paper Table 4: speedup of s-step BDCD over BDCD for K-RR as the block
+size b varies (1, 2, 4) — measured on-host (computation side) and modeled
+at the paper's 512-core scale (communication side).
+
+Expected (and observed in the paper): the s-step advantage SHRINKS as b
+grows, because bandwidth (s*b*m words/round) starts to dominate latency."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KernelConfig, KRRConfig, bdcd_krr, block_schedule,
+                        sstep_bdcd_krr)
+from repro.core.perf_model import Machine, Problem, best_s, bdcd_cost
+from repro.data.synthetic import regression_dataset
+
+from .common import emit, save_json, timeit
+
+KERNELS = [KernelConfig("linear"), KernelConfig("polynomial", 3, 0.0),
+           KernelConfig("rbf", sigma=1.0)]
+
+
+def run(fast: bool = False):
+    m, n = (256, 512) if fast else (512, 2000)   # colon-cancer-like scale
+    A, y = regression_dataset(jax.random.key(4), m, n)
+    a0 = jnp.zeros(m)
+    mach = Machine()
+    results = []
+    for kern in KERNELS:
+        cfg = KRRConfig(lam=1.0, kernel=kern)
+        for b in (1, 2, 4):
+            H = 128
+            sched = block_schedule(jax.random.key(5), H, m, b)
+            t_ref = timeit(lambda: bdcd_krr(A, y, a0, sched, cfg)[0],
+                           iters=3)
+            best_meas = 0.0
+            for s in (8, 32):
+                t_s = timeit(lambda s=s: sstep_bdcd_krr(
+                    A, y, a0, sched, cfg, s=s)[0], iters=3)
+                best_meas = max(best_meas, t_ref / t_s)
+            prob = Problem(m=19996, n=1355191, f=0.0003, b=b, H=4096,
+                           kernel=kern.name)
+            t1 = bdcd_cost(prob, mach, 512)
+            s_star, ts = best_s(prob, mach, 512)
+            results.append({
+                "kernel": kern.name, "b": b,
+                "measured_1core_speedup": best_meas,
+                "modeled_512core_speedup": t1["time"] / ts,
+                "modeled_best_s": s_star,
+            })
+            emit(f"table4/{kern.name}/b={b}", 0.0,
+                 f"measured={best_meas:.2f}x;"
+                 f"modeled512={t1['time'] / ts:.2f}x;s*={s_star}")
+    save_json("table4_blocksize.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""End-to-end driver (deliverable b): train a ~100M-param qwen3-family
+model for a few hundred steps on the synthetic token pipeline, with
+checkpoint/resume and loss reporting.
+
+    PYTHONPATH=src python examples/lm_train.py            # ~100M, 200 steps
+    PYTHONPATH=src python examples/lm_train.py --tiny     # CI-speed
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import get_config
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.tiny:
+        argv = ["--arch", "qwen3-1.7b", "--reduced",
+                "--steps", str(args.steps or 30),
+                "--batch", "4", "--seq", "32", "--lr", "1e-2",
+                "--log-every", "5"]
+    else:
+        # ~100M-param decoder (qwen3 family traits, scaled):
+        # patch the registry entry on the fly via launch.train's --arch
+        # reduced path is too small; use a custom injection instead.
+        import repro.configs.qwen3_1p7b as q
+        cfg100m = dataclasses.replace(
+            q.CONFIG, n_layers=8, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=8192, remat="none")
+        q.REDUCED = cfg100m      # launch.train --reduced picks this up
+        argv = ["--arch", "qwen3-1.7b", "--reduced",
+                "--steps", str(args.steps or 200),
+                "--batch", "8", "--seq", "128", "--lr", "3e-3",
+                "--ckpt-dir", "/tmp/repro_lm100m_ckpt", "--log-every", "10"]
+
+    losses = train_main(argv)
+    if losses[-1] >= losses[0]:
+        sys.exit("loss did not decrease")
+    print(f"loss decreased {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

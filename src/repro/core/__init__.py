@@ -1,0 +1,9 @@
+from .kernels import KernelConfig, gram_slab, gram_full, apply_epilogue
+from .dcd import SVMConfig, dcd_ksvm, coordinate_schedule, L1, L2
+from .sstep_dcd import sstep_dcd_ksvm
+from .bdcd import KRRConfig, bdcd_krr, block_schedule
+from .sstep_bdcd import sstep_bdcd_krr
+from .objectives import (ksvm_duality_gap, ksvm_dual_objective,
+                         ksvm_primal_objective, krr_closed_form,
+                         krr_dual_objective, relative_solution_error,
+                         ksvm_predict, krr_predict)

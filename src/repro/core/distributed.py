@@ -1,0 +1,238 @@
+"""Distributed DCD/BDCD solvers under ``shard_map`` — the paper's MPI
+implementation (Section 5.2) mapped to JAX mesh collectives.
+
+Layouts
+-------
+1D (paper):   A is partitioned in 1D-column (feature) layout over the
+              ``model`` axis — each device holds ``A[:, n/P]``.  The
+              per-iteration kernel-slab reduction ``sum_p A_p B_p^T`` is an
+              ``MPI_Allreduce`` in the paper and a ``lax.psum`` here.
+              alpha, y and all solver state are replicated, exactly as
+              each MPI rank "redundantly stores y and alpha" (Thm 1 proof).
+
+2D (beyond paper): additionally shards samples over the ``data`` axis.
+              The m x sb slab then lives row-sharded (each device reduces
+              only ``m/P_data x sb`` words over the model axis), cutting
+              the psum bandwidth term of Theorem 2 by P_data at the cost
+              of two extra small collectives per round (sampled-row gather
+              + cross-term gather).  See EXPERIMENTS.md §Perf.
+
+Classical vs s-step: the classical solvers communicate every iteration
+(H collectives); the s-step solvers communicate once per outer round
+(H/s collectives), which is the paper's entire contribution.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .bdcd import KRRConfig
+from .dcd import SVMConfig
+from .kernels import RBF, KernelConfig, apply_epilogue
+from .sstep_bdcd import sstep_bdcd_krr
+from .sstep_dcd import sstep_dcd_ksvm
+
+
+def make_allreduce_gram(axis_name: str, row_sqnorms=None):
+    """Feature-partitioned gram slab: partial GEMM on local columns, then
+    one all-reduce (== the paper's MPI_Allreduce), then the nonlinear
+    epilogue applied redundantly on every rank (as in Thm 1/2 proofs).
+
+    §Perf-paper optimization: for RBF, ``row_sqnorms`` (the psummed
+    ||a_i||^2, computed ONCE per solve — they are loop-invariant) removes
+    the per-round (m,) norm psum, and the remaining (s*b,) B-norm vector
+    is FUSED into the slab all-reduce (concat one extra row), so every
+    round issues exactly ONE collective — the paper's ideal schedule.
+    """
+
+    def gram(A_loc, B_loc, cfg: KernelConfig):
+        dots_part = A_loc @ B_loc.T                       # (m, sb) partial
+        if cfg.name != RBF:
+            return apply_epilogue(jax.lax.psum(dots_part, axis_name), cfg)
+        cs_part = jnp.sum(B_loc * B_loc, axis=1)[None, :]  # (1, sb)
+        if row_sqnorms is not None:
+            packed = jax.lax.psum(
+                jnp.concatenate([dots_part, cs_part], axis=0), axis_name)
+            return apply_epilogue(packed[:-1], cfg, row_sqnorms,
+                                  packed[-1])
+        rs = jax.lax.psum(jnp.sum(A_loc * A_loc, axis=1), axis_name)
+        cs = jax.lax.psum(cs_part[0], axis_name)
+        return apply_epilogue(jax.lax.psum(dots_part, axis_name), cfg,
+                              rs, cs)
+
+    return gram
+
+
+# --------------------------------------------------------------------------
+# 1D (paper) layout solvers.  The serial solver bodies are reused verbatim:
+# only the gram function changes, which is precisely the paper's claim that
+# the s-step schedule is independent of the partitioning.
+# --------------------------------------------------------------------------
+
+def dist_sstep_dcd_ksvm(mesh: Mesh, A, y, alpha0, schedule,
+                        cfg: SVMConfig, s: int, axis_name: str = "model"):
+    """s-step DCD for K-SVM with A in 1D-column layout over ``axis_name``.
+
+    A may be passed as a global array; it is sharded on features by the
+    in_spec.  Returns the replicated final alpha.
+    """
+    spec_A = P(None, axis_name)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(spec_A, P(), P(), P()), out_specs=P(),
+             check_vma=False)
+    def run(A_loc, y_r, a0_r, sched_r):
+        Atil_loc = y_r[:, None] * A_loc
+        rs = (jax.lax.psum(jnp.sum(Atil_loc * Atil_loc, axis=1), axis_name)
+              if cfg.kernel.name == RBF else None)
+        gram = make_allreduce_gram(axis_name, row_sqnorms=rs)
+        # pass A_loc (sstep solver re-applies diag(y), idempotent w/ ones)
+        out, _ = sstep_dcd_ksvm(A_loc, y_r, a0_r, sched_r, cfg, s,
+                                gram_fn=gram)
+        return out
+
+    return run(A, y, alpha0, schedule)
+
+
+def dist_dcd_ksvm(mesh: Mesh, A, y, alpha0, schedule,
+                  cfg: SVMConfig, axis_name: str = "model"):
+    """Classical DCD baseline (communicates every iteration): implemented
+    as s-step with s=1, which degenerates to Algorithm 1's schedule —
+    one m-word psum per iteration."""
+    return dist_sstep_dcd_ksvm(mesh, A, y, alpha0, schedule, cfg, s=1,
+                               axis_name=axis_name)
+
+
+def dist_sstep_bdcd_krr(mesh: Mesh, A, y, alpha0, schedule,
+                        cfg: KRRConfig, s: int, axis_name: str = "model"):
+    """s-step BDCD for K-RR, 1D-column layout."""
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(None, axis_name), P(), P(), P()), out_specs=P(),
+             check_vma=False)
+    def run(A_loc, y_r, a0_r, sched_r):
+        rs = (jax.lax.psum(jnp.sum(A_loc * A_loc, axis=1), axis_name)
+              if cfg.kernel.name == RBF else None)
+        gram = make_allreduce_gram(axis_name, row_sqnorms=rs)
+        out, _ = sstep_bdcd_krr(A_loc, y_r, a0_r, sched_r, cfg, s,
+                                gram_fn=gram)
+        return out
+
+    return run(A, y, alpha0, schedule)
+
+
+def dist_bdcd_krr(mesh: Mesh, A, y, alpha0, schedule,
+                  cfg: KRRConfig, axis_name: str = "model"):
+    """Classical BDCD baseline — one (m x b)-word psum per iteration."""
+    return dist_sstep_bdcd_krr(mesh, A, y, alpha0, schedule, cfg, s=1,
+                               axis_name=axis_name)
+
+
+# --------------------------------------------------------------------------
+# 2D (samples x features) s-step BDCD — beyond-paper optimization.
+# --------------------------------------------------------------------------
+
+def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
+                           cfg: KRRConfig, s: int,
+                           data_axis: str = "data",
+                           model_axis: str = "model"):
+    """2D-partitioned s-step BDCD: A[m/Pd, n/Pm] per device, alpha sharded
+    over ``data``.
+
+    Per outer round the collective schedule is:
+      1. psum_data  : gather the s*b sampled rows (s*b x n/Pm words)
+      2. psum_model : reduce the row-local slab  (m/Pd x s*b words)
+      3. psum_data  : fuse {cross-term block Gblk, Q^T alpha, alpha/y at
+                      sampled idx} into ONE collective (s*b x (s*b+3))
+    vs. the 1D layout's single psum of (m x s*b).  For m >> s*b*Pd the
+    bandwidth term drops by ~Pd while latency grows 3x — a win exactly in
+    the paper's bandwidth-bound regime (news20, Fig. 6-7).
+    """
+    m = A.shape[0]
+    pd = mesh.shape[data_axis]
+    if m % pd != 0:
+        raise ValueError(f"m={m} must divide data axis {pd}")
+    m_loc = m // pd
+    H, b = schedule.shape
+    if H % s != 0:
+        raise ValueError("H % s != 0")
+    inv_lam = 1.0 / cfg.lam
+    rounds_shape = (H // s, s, b)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
+                       P()),
+             out_specs=P(data_axis), check_vma=False)
+    def run(A_loc, y_loc, a0_loc, sched):
+        my_d = jax.lax.axis_index(data_axis)
+        row0 = my_d * m_loc
+        rounds = sched.reshape(rounds_shape)
+
+        def outer(alpha_loc, idx):                    # idx: (s, b) global
+            flat = idx.reshape(s * b)
+            # (1) gather sampled rows across the data axis (one-hot matmul
+            #     keeps it a psum — no gather collective needed).
+            onehot = (flat[:, None] == (row0 + jnp.arange(m_loc))[None, :])
+            onehot = onehot.astype(A_loc.dtype)       # (sb, m_loc)
+            B_loc = jax.lax.psum(onehot @ A_loc, data_axis)   # (sb, n_loc)
+            # (2) row-local slab, reduced over the model axis only.
+            dots = jax.lax.psum(A_loc @ B_loc.T, model_axis)  # (m_loc, sb)
+            if cfg.kernel.name == RBF:
+                rs = jax.lax.psum(jnp.sum(A_loc * A_loc, 1), model_axis)
+                cs = jax.lax.psum(jnp.sum(B_loc * B_loc, 1), model_axis)
+                Q_loc = apply_epilogue(dots, cfg.kernel, rs, cs)
+            else:
+                Q_loc = apply_epilogue(dots, cfg.kernel)
+            # (3) one fused data-axis psum for every cross term the inner
+            #     loop needs: Gblk (sb x sb), Q^T alpha (sb), alpha@idx,
+            #     y@idx (sb each).
+            packed = jnp.concatenate([
+                onehot @ Q_loc,                        # (sb, sb) partial Gblk
+                (Q_loc.T @ alpha_loc)[:, None],        # (sb, 1)
+                (onehot @ alpha_loc)[:, None],         # (sb, 1)
+                (onehot @ y_loc)[:, None],             # (sb, 1)
+            ], axis=1)
+            packed = jax.lax.psum(packed, data_axis)
+            Gblk = packed[:, :s * b]
+            QTalpha = packed[:, s * b]
+            alpha_at = packed[:, s * b + 1].reshape(s, b)
+            y_at = packed[:, s * b + 2].reshape(s, b)
+
+            collide = (flat[:, None] == flat[None, :]).astype(A_loc.dtype)
+            collide4 = collide.reshape(s, b, s, b)
+            Gblk4 = Gblk.reshape(s, b, s, b)
+            eye_b = jnp.eye(b, dtype=A_loc.dtype)
+
+            # redundant inner loop — identical math to sstep_bdcd_krr
+            def inner(j, dalpha):
+                tmask = (jnp.arange(s) < j).astype(A_loc.dtype)
+                prior = dalpha * tmask[:, None]
+                vv = jnp.einsum("tq,tqp->p", prior, collide4[:, :, j, :])
+                uv = jnp.einsum("tq,tqp->p", prior, Gblk4[:, :, j, :])
+                Uj_idx = jax.lax.dynamic_slice_in_dim(
+                    Gblk4[:, :, j, :].reshape(s * b, b), j * b, b, axis=0)
+                G = inv_lam * Uj_idx + m * eye_b
+                rhs = (y_at[j] - m * alpha_at[j] - m * vv
+                       - inv_lam * jax.lax.dynamic_slice_in_dim(
+                           QTalpha, j * b, b)
+                       - inv_lam * uv)
+                return dalpha.at[j].set(jnp.linalg.solve(G, rhs))
+
+            dalpha = jax.lax.fori_loop(0, s, inner,
+                                       jnp.zeros((s, b), A_loc.dtype))
+            # locally-owned scatter-add of the deferred update
+            upd = onehot.T @ dalpha.reshape(s * b)      # (m_loc,)
+            return alpha_loc + upd, 0.0
+
+        out, _ = jax.lax.scan(outer, a0_loc, rounds)
+        return out
+
+    return run(A, y, alpha0, schedule)
+
+
+def shard_dataset_1d(mesh: Mesh, A, axis_name: str = "model"):
+    """Place a host array in the paper's 1D-column layout on the mesh."""
+    return jax.device_put(A, NamedSharding(mesh, P(None, axis_name)))

@@ -1,0 +1,82 @@
+"""Kernel functions (paper Table 1) and gram-slab computation.
+
+The paper's hot spot is ``K(A, Omega_k^T A)`` — an ``m x (s*b)`` slab of the
+full ``m x m`` kernel matrix.  On TPU this is a GEMM (MXU) followed by a
+pointwise epilogue (VPU).  ``gram_slab`` below is the pure-jnp reference
+path; the Pallas fused kernel lives in ``repro.kernels.gram`` and is
+numerically validated against this implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+LINEAR = "linear"
+POLYNOMIAL = "polynomial"
+RBF = "rbf"
+
+_VALID = (LINEAR, POLYNOMIAL, RBF)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Configuration of the kernel function K (paper Table 1).
+
+    linear:      K(x, z) = x.z
+    polynomial:  K(x, z) = (c + x.z)^d          (c >= 0, d >= 2)
+    rbf:         K(x, z) = exp(-sigma ||x-z||^2) (sigma > 0)
+    """
+
+    name: str = RBF
+    degree: int = 3
+    coef0: float = 0.0
+    sigma: float = 1.0
+
+    def __post_init__(self):
+        if self.name not in _VALID:
+            raise ValueError(f"unknown kernel {self.name!r}; expected one of {_VALID}")
+
+
+def apply_epilogue(dots: jnp.ndarray, cfg: KernelConfig,
+                   row_sqnorms: Optional[jnp.ndarray] = None,
+                   col_sqnorms: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Pointwise kernel epilogue applied to a block of dot products.
+
+    ``dots[i, j] = a_i . b_j``.  For RBF the squared norms of the rows of A
+    (``row_sqnorms``) and of B (``col_sqnorms``) must be supplied so that
+    ``||a_i - b_j||^2 = ||a_i||^2 + ||b_j||^2 - 2 a_i.b_j``.
+    """
+    if cfg.name == LINEAR:
+        return dots
+    if cfg.name == POLYNOMIAL:
+        return (cfg.coef0 + dots) ** cfg.degree
+    # RBF
+    assert row_sqnorms is not None and col_sqnorms is not None
+    sq = row_sqnorms[:, None] + col_sqnorms[None, :] - 2.0 * dots
+    # Clamp tiny negative values produced by cancellation so exp stays <= 1
+    sq = jnp.maximum(sq, 0.0)
+    return jnp.exp(-cfg.sigma * sq)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def gram_slab(A: jnp.ndarray, B: jnp.ndarray, cfg: KernelConfig) -> jnp.ndarray:
+    """Compute the kernel slab ``K(A, B) in R^{m x r}``.
+
+    A: (m, n) full (or feature-sharded) data matrix.
+    B: (r, n) the sampled rows ``Omega_k^T A`` (same feature layout as A).
+    """
+    dots = A @ B.T
+    if cfg.name == RBF:
+        rs = jnp.sum(A * A, axis=1)
+        cs = jnp.sum(B * B, axis=1)
+        return apply_epilogue(dots, cfg, rs, cs)
+    return apply_epilogue(dots, cfg)
+
+
+def gram_full(A: jnp.ndarray, cfg: KernelConfig) -> jnp.ndarray:
+    """Full m x m kernel matrix (only for oracles / closed-form solves)."""
+    return gram_slab(A, A, cfg)

@@ -1,0 +1,97 @@
+"""Objectives, duality gap, and closed-form oracles used by the paper's
+convergence experiments (Figures 1-2).
+
+K-SVM duality gap:   gap(alpha) = P(alpha) + D(alpha), where D is the dual
+*minimization* objective (so the dual value of the max form is -D) and P is
+the primal objective evaluated at the primal point induced by alpha.
+For a convex problem gap -> 0; the paper plots it to 1e-8.
+
+K-RR: closed-form solution alpha* = ((1/lam) K + m I)^{-1} y and the
+relative solution error ||alpha_k - alpha*|| / ||alpha*||.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .bdcd import KRRConfig
+from .dcd import L1, SVMConfig
+from .kernels import gram_full
+
+
+def _Qbar(A, y, cfg: SVMConfig):
+    """Qbar_ij = y_i y_j K(a_i, a_j) (+ omega I for L2)."""
+    K = gram_full(A, cfg.kernel)
+    Q = (y[:, None] * y[None, :]) * K
+    if cfg.loss != L1:
+        Q = Q + cfg.omega * jnp.eye(A.shape[0], dtype=A.dtype)
+    return Q
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ksvm_dual_objective(A, y, alpha, cfg: SVMConfig):
+    """D(alpha) = 1/2 alpha^T Qbar alpha - sum(alpha)   (minimization form;
+    the omega*I term inside Qbar carries the L2 1/(4C)||alpha||^2)."""
+    Q = _Qbar(A, y, cfg)
+    return 0.5 * alpha @ (Q @ alpha) - jnp.sum(alpha)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ksvm_primal_objective(A, y, alpha, cfg: SVMConfig):
+    """Primal objective at the KKT primal point w = sum_i alpha_i y_i phi(a_i):
+    1/2 ||w||^2 = 1/2 alpha^T Q alpha (Q without the L2 shift) and the
+    margins y_i f(a_i) = (Q alpha)_i."""
+    K = gram_full(A, cfg.kernel)
+    Q = (y[:, None] * y[None, :]) * K
+    Qa = Q @ alpha
+    margins = jnp.maximum(1.0 - Qa, 0.0)
+    if cfg.loss == L1:
+        loss = cfg.C * jnp.sum(margins)
+    else:
+        loss = cfg.C * jnp.sum(margins ** 2)
+    return 0.5 * alpha @ Qa + loss
+
+
+def ksvm_duality_gap(A, y, alpha, cfg: SVMConfig):
+    return ksvm_primal_objective(A, y, alpha, cfg) + ksvm_dual_objective(
+        A, y, alpha, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def krr_dual_objective(A, y, alpha, cfg: KRRConfig):
+    """Paper eq. (2): 1/2 alpha^T ((1/lam) K + m I) alpha - alpha^T y."""
+    m = A.shape[0]
+    K = gram_full(A, cfg.kernel)
+    M = K / cfg.lam + m * jnp.eye(m, dtype=A.dtype)
+    return 0.5 * alpha @ (M @ alpha) - alpha @ y
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def krr_closed_form(A, y, cfg: KRRConfig):
+    """alpha* via full kernel-matrix factorization (paper's reference)."""
+    m = A.shape[0]
+    K = gram_full(A, cfg.kernel)
+    M = K / cfg.lam + m * jnp.eye(m, dtype=A.dtype)
+    return jnp.linalg.solve(M, y)
+
+
+def relative_solution_error(alpha, alpha_star):
+    return jnp.linalg.norm(alpha - alpha_star) / jnp.linalg.norm(alpha_star)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ksvm_predict(A_train, y_train, alpha, A_test, cfg: SVMConfig):
+    """Decision values f(x) = sum_i alpha_i y_i K(a_i, x)."""
+    from .kernels import gram_slab
+    Kxt = gram_slab(A_test, A_train, cfg.kernel)     # (mt, m)
+    return Kxt @ (alpha * y_train)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def krr_predict(A_train, alpha, A_test, cfg: KRRConfig):
+    """K-RR predictions.  With M alpha = y, f(x) = (1/lam) K(x, A) alpha."""
+    from .kernels import gram_slab
+    Kxt = gram_slab(A_test, A_train, cfg.kernel)
+    return (Kxt @ alpha) / cfg.lam

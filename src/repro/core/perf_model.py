@@ -1,0 +1,83 @@
+"""Hockney-model performance analysis (paper Section 4, Theorems 1-2).
+
+T = gamma*F + beta*W + phi*L  with per-iteration costs:
+
+  BDCD:        F = b*f*m*n/P + mu*b*m + b^3 + b*m      W = b*m      L = log P
+  s-step BDCD: per OUTER round (s inner solves):
+               F = s*b*f*m*n/P + mu*s*b*m + s*b^3 + C(s,2)*b^2 + s*b*m
+               W = s*b*m                               L = log P
+
+DCD (K-SVM) is the b=1 specialization.  These closed forms power the
+strong-scaling predictions (benchmarks/fig3) that mirror the paper's Cray
+EX experiments, calibrated with machine parameters measured on this host
+(gamma) and standard HPC interconnect constants (beta, phi).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    gamma: float = 1.0 / 50e9     # s/flop  (~50 GFLOP/s per core, DGEMM)
+    beta: float = 8.0 / 25e9      # s/word  (8B words over 25 GB/s links)
+    phi: float = 2.0e-6           # s/message (Cray EX / Slingshot-ish)
+    mu: float = 20.0              # non-linear kernel op cost in flop units
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    m: int
+    n: int
+    f: float = 1.0                # nnz density
+    b: int = 1
+    H: int = 1000                 # total (inner) iterations
+    kernel: str = "rbf"
+
+
+def _mu(mach: Machine, prob: Problem) -> float:
+    return {"linear": 1.0, "polynomial": mach.mu / 2, "rbf": mach.mu}[
+        prob.kernel]
+
+
+def bdcd_cost(prob: Problem, mach: Machine, P: int) -> dict:
+    """Classical BDCD total cost for H iterations on P processors."""
+    b, m, n, f, H = prob.b, prob.m, prob.n, prob.f, prob.H
+    mu = _mu(mach, prob)
+    F = H * (b * f * m * n / P + mu * b * m + b ** 3 + b * m)
+    W = H * b * m
+    L = H * math.log2(max(P, 2))
+    return {"flops": F, "words": W, "msgs": L,
+            "time": mach.gamma * F + mach.beta * W + mach.phi * L,
+            "t_comp": mach.gamma * F, "t_band": mach.beta * W,
+            "t_lat": mach.phi * L}
+
+
+def sstep_bdcd_cost(prob: Problem, mach: Machine, P: int, s: int) -> dict:
+    """s-step BDCD total cost for H inner iterations (H/s outer rounds)."""
+    b, m, n, f, H = prob.b, prob.m, prob.n, prob.f, prob.H
+    mu = _mu(mach, prob)
+    rounds = H / s
+    F = rounds * (s * b * f * m * n / P + mu * s * b * m + s * b ** 3
+                  + math.comb(s, 2) * b ** 2 + s * b * m)
+    W = rounds * (s * b * m)
+    L = rounds * math.log2(max(P, 2))
+    return {"flops": F, "words": W, "msgs": L,
+            "time": mach.gamma * F + mach.beta * W + mach.phi * L,
+            "t_comp": mach.gamma * F, "t_band": mach.beta * W,
+            "t_lat": mach.phi * L}
+
+
+def best_s(prob: Problem, mach: Machine, P: int,
+           candidates=(1, 2, 4, 8, 16, 32, 64, 128, 256)) -> tuple:
+    """Offline tuning of s (paper 5.2.1): best predicted time."""
+    times = {s: sstep_bdcd_cost(prob, mach, P, s)["time"]
+             for s in candidates}
+    s = min(times, key=times.get)
+    return s, times[s]
+
+
+def storage_words(prob: Problem, P: int, s: int = 1) -> float:
+    """Theorem 1/2 storage: fmn/P + s*b*m."""
+    return prob.f * prob.m * prob.n / P + s * prob.b * prob.m

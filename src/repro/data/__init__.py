@@ -1,0 +1,3 @@
+from .synthetic import (classification_dataset, regression_dataset,
+                        sparse_classification_dataset)
+from .tokens import TokenPipeline

@@ -1,0 +1,54 @@
+"""Deterministic synthetic token pipeline for LM training.
+
+Design goals (1000+ node deployments):
+  * **Stateless / index-derived**: batch ``k`` is a pure function of
+    ``(seed, k)`` — any worker can reconstruct any batch, so restarts and
+    elastic re-sharding never need data-loader state in the checkpoint.
+  * **Shardable**: ``global_batch`` is laid out on the (pod, data) mesh axes
+    via ``jax.make_array_from_callback``-style per-shard generation.
+  * Synthetic corpus: a mixture of Zipfian unigram draws and shifted
+    repeats, giving a learnable (non-uniform) next-token distribution so
+    loss actually decreases in the end-to-end example.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def _zipf_logits(self) -> np.ndarray:
+        ranks = np.arange(1, self.vocab_size + 1, dtype=np.float64)
+        return (-1.1 * np.log(ranks)).astype(np.float32)
+
+    def batch(self, step: int) -> dict:
+        """Host-side global batch for step ``step`` (tokens + labels)."""
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        k1, k2 = jax.random.split(key)
+        logits = jnp.asarray(self._zipf_logits())
+        toks = jax.random.categorical(
+            k1, logits, shape=(self.global_batch, self.seq_len + 1))
+        # Inject copy structure: second half repeats the first half for a
+        # random subset of rows -> learnable induction pattern.
+        half = (self.seq_len + 1) // 2
+        copy_rows = jax.random.bernoulli(k2, 0.5, (self.global_batch, 1))
+        copied = jnp.concatenate([toks[:, :half], toks[:, :self.seq_len + 1 - half]], axis=1)
+        toks = jnp.where(copy_rows, copied, toks)
+        return {
+            "tokens": toks[:, :-1].astype(jnp.int32),
+            "labels": toks[:, 1:].astype(jnp.int32),
+        }
+
+    def shard_batch(self, step: int, sharding) -> dict:
+        """Device-side batch placed with the given NamedSharding."""
+        host = self.batch(step)
+        return {k: jax.device_put(v, sharding) for k, v in host.items()}

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+  gram.py            fused kernel-slab GEMM + {linear,poly,rbf} epilogue
+                     (the paper's hot spot: K(A, Omega^T A))
+  flash_attention.py flash attention fwd + bwd (FlashAttention-2 style)
+  rmsnorm.py         fused RMSNorm
+
+ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
+"""
+from . import ops, ref

@@ -1,0 +1,132 @@
+"""Fused kernel-slab (gram) Pallas TPU kernel.
+
+Computes ``K(A, B) = epilogue(A @ B^T)`` for the paper's three kernels
+(Table 1) WITHOUT materializing the pre-epilogue dot-product slab in HBM.
+
+Why this kernel exists (DESIGN.md §2): the paper pays ``mu * s*b*m`` for the
+pointwise exp/pow AND streams the m x sb slab HBM->core->HBM twice (GEMM
+write + epilogue read/write).  On TPU we tile the GEMM onto the MXU and run
+the epilogue on the VPU while the f32 accumulator tile is still resident in
+VMEM — one HBM write total, and the separate row/col squared-norm passes
+for RBF are folded into the same k-loop.
+
+Grid: (m/bm, r/br, n/bk), k innermost ("arbitrary"), so each (i, j) output
+tile accumulates across k steps in VMEM scratch and applies the epilogue at
+the final k step.
+
+TPU alignment: block shapes are multiples of (8, 128) for f32 / (16, 128)
+for bf16; the MXU sees (bm x bk) @ (bk x br) with bm=br=128, bk=512 by
+default (A tile 256KB + B tile 256KB + acc 64KB << 16MB VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.kernels import LINEAR, POLYNOMIAL, RBF, KernelConfig
+
+
+def _gram_kernel(a_ref, b_ref, o_ref, acc_ref, rs_ref, cs_ref, *,
+                 kernel_name: str, degree: int, coef0: float, sigma: float,
+                 k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if kernel_name == RBF:
+            rs_ref[...] = jnp.zeros_like(rs_ref)
+            cs_ref[...] = jnp.zeros_like(cs_ref)
+
+    a = a_ref[...]                                   # (bm, bk)
+    b = b_ref[...]                                   # (br, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # MXU
+    if kernel_name == RBF:
+        af = a.astype(jnp.float32)
+        bf = b.astype(jnp.float32)
+        rs_ref[...] += jnp.sum(af * af, axis=1, keepdims=True)
+        cs_ref[...] += jnp.sum(bf * bf, axis=1, keepdims=True)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():                                 # VPU, VMEM-resident
+        dots = acc_ref[...]
+        if kernel_name == LINEAR:
+            out = dots
+        elif kernel_name == POLYNOMIAL:
+            out = (coef0 + dots) ** degree
+        else:                                        # RBF
+            sq = rs_ref[...] + cs_ref[...].T - 2.0 * dots
+            out = jnp.exp(-sigma * jnp.maximum(sq, 0.0))
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "bm", "br", "bk", "interpret", "out_dtype"))
+def gram_pallas(A: jnp.ndarray, B: jnp.ndarray, cfg: KernelConfig,
+                *, bm: int = 128, br: int = 128, bk: int = 512,
+                interpret: bool = False, out_dtype=jnp.float32):
+    """K(A, B) with A: (m, n), B: (r, n) -> (m, r) in ``out_dtype``.
+
+    Shapes need not be block-aligned — inputs are zero-padded and the
+    output sliced back (zero padding is epilogue-safe: padded rows/cols are
+    discarded before any consumer sees them).
+    """
+    m, n = A.shape
+    r, n2 = B.shape
+    assert n == n2, (A.shape, B.shape)
+    bm_ = min(bm, _round_up(m))
+    br_ = min(br, _round_up(r))
+    bk_ = min(bk, _round_up_lane(n))
+    Ap = _pad_to(_pad_to(A, bm_, 0), bk_, 1)
+    Bp = _pad_to(_pad_to(B, br_, 0), bk_, 1)
+    M, N = Ap.shape
+    R = Bp.shape[0]
+    k_steps = N // bk_
+    grid = (M // bm_, R // br_, k_steps)
+
+    kern = functools.partial(
+        _gram_kernel, kernel_name=cfg.name, degree=cfg.degree,
+        coef0=cfg.coef0, sigma=cfg.sigma, k_steps=k_steps)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((br_, bk_), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm_, br_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, R), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm_, br_), jnp.float32),
+            pltpu.VMEM((bm_, 1), jnp.float32),
+            pltpu.VMEM((br_, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(Ap, Bp)
+    return out[:m, :r]
+
+
+def _round_up(x, mult: int = 8):
+    return ((x + mult - 1) // mult) * mult
+
+
+def _round_up_lane(x, mult: int = 128):
+    return ((x + mult - 1) // mult) * mult

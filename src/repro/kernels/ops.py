@@ -1,0 +1,59 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``gram`` dispatches to the fused Pallas kernel on TPU and to interpret mode
+(Python-evaluated kernel body — bit-identical control flow) elsewhere, so
+the same call sites run everywhere.  Pass ``force_ref=True`` to get the
+pure-jnp oracle (used by tests and as the XLA-fusion baseline in §Perf).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.kernels import KernelConfig
+from .gram import gram_pallas
+from .ref import gram_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gram(A, B, cfg: KernelConfig, *, force_ref: bool = False, **tiles):
+    if force_ref:
+        return gram_ref(A, B, cfg)
+    return gram_pallas(A, B, cfg, interpret=not on_tpu(), **tiles)
+
+
+def sdpa_flash(q, k, v, causal=True, interpret=None, bq=256, bk=256):
+    """Flash attention on (B, S, H, hd)-layout tensors (model convention).
+    Returns (B, S, H, hdv).  K/V must already be head-repeated (GQA)."""
+    from .flash_attention import flash_attention
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    hdv = v.shape[-1]
+    interp = (not on_tpu()) if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, T, hdv)
+    o = flash_attention(qt, kt, vt, causal, None, bq, bk, interp)
+    return o.reshape(B, H, S, hdv).transpose(0, 2, 1, 3)
+
+
+def make_solver_gram_fn(use_pallas: bool = True):
+    """gram_fn for the core solvers (matches core.kernels.gram_slab's
+    signature).  On non-TPU backends interpret mode is slow, so solvers
+    default to the jnp path there unless explicitly forced."""
+    if not use_pallas:
+        return None
+
+    def fn(A, B, cfg):
+        return gram(A, B, cfg).astype(A.dtype)
+
+    return fn
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, interpret=None):
+    """Fused RMSNorm (TPU Pallas; interpret-mode elsewhere)."""
+    from .rmsnorm import rmsnorm_pallas
+    interp = (not on_tpu()) if interpret is None else interpret
+    return rmsnorm_pallas(x, scale, eps=eps, interpret=interp)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.kernels import KernelConfig, gram_slab
+
+
+def gram_ref(A: jnp.ndarray, B: jnp.ndarray, cfg: KernelConfig,
+             out_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for kernels/gram.py: epilogue(A @ B^T) in f32 accumulation."""
+    return gram_slab(A.astype(jnp.float32), B.astype(jnp.float32),
+                     cfg).astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, causal=True, scale=None):
+    """Oracle for kernels/flash_attention.py.  q/k/v: (BH, S|T, hd)."""
+    hd = q.shape[-1]
+    scale = scale if scale is not None else hd ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        S, T = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((S, T), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

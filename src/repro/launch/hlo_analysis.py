@@ -1,0 +1,54 @@
+"""HLO-text analysis helpers (import-safe: no jax device-state effects).
+
+collective_bytes: sum operand bytes of every collective op in an HLO
+module — the §Roofline collective term.  While-loop bodies appear once in
+the text; the dry-run corrects for layer-scan trip counts with its
+two-point unrolled probes (see dryrun.extrapolated_costs).
+"""
+from __future__ import annotations
+
+import re
+
+# result-shape form: `%x = f32[a,b]{...} all-reduce(...)` (modern HLO
+# prints operands as bare refs), with an operand-shape fallback for the
+# older inline form.
+COLLECTIVE_LINE_RE = re.compile(
+    r"= ([^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)")
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|f64|s64|pred|c64)"
+                      r"\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"f64": 8, "s64": 8, "c64": 8, "f32": 4, "s32": 4, "u32": 4,
+               "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    nbytes = 0
+    for sm in SHAPE_RE.finditer(text):
+        dt, dims = sm.group(1), sm.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * DTYPE_BYTES[dt]
+    return nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    per_kind = {}
+    for m in COLLECTIVE_LINE_RE.finditer(hlo_text):
+        kind = m.group(2)
+        # prefer operand shapes (inline form); fall back to result shape
+        nbytes = _shape_bytes(m.group(3)) or _shape_bytes(m.group(1))
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+    return per_kind
+
+
+def count_collectives(hlo_text: str) -> dict:
+    """Number of collective OPS per kind (latency-term proxy: the paper's
+    'messages' count)."""
+    out = {}
+    for m in COLLECTIVE_LINE_RE.finditer(hlo_text):
+        out[m.group(2)] = out.get(m.group(2), 0) + 1
+    return out

@@ -1,0 +1,39 @@
+"""Jaxpr-level collective counting: number of collective EXECUTIONS per
+step, with scan trip counts multiplied through (unlike HLO text, where a
+while body appears once).  This is the paper's 'messages' (latency) term
+for an arbitrary jax program — used to verify the s-step schedules
+structurally."""
+from __future__ import annotations
+
+import jax
+
+COLLECTIVE_PRIMS = {"psum", "all_gather", "reduce_scatter", "all_to_all",
+                    "ppermute", "psum_invariant", "pmax", "pmin"}
+
+
+def count_collective_executions(jaxpr, _mult: int = 1) -> int:
+    """jaxpr: a ClosedJaxpr (e.g. jax.make_jaxpr(f)(*args))."""
+    core_jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    total = 0
+    for eqn in core_jaxpr.eqns:
+        name = eqn.primitive.name
+        mult = _mult
+        if name == "scan":
+            mult *= int(eqn.params.get("length", 1))
+        if name in COLLECTIVE_PRIMS:
+            total += _mult
+            continue
+        # recurse into sub-jaxprs (scan/while/cond/pjit/shard_map/remat...)
+        for sub in _sub_jaxprs(eqn):
+            total += count_collective_executions(sub, mult)
+    return total
+
+
+def _sub_jaxprs(eqn):
+    out = []
+    for k, v in eqn.params.items():
+        if k in ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr"):
+            out.append(v)
+        elif k == "branches":
+            out.extend(v)
+    return out

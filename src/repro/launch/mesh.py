@@ -1,0 +1,32 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets the host-device-count env var
+before any jax initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips across DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests and
+    examples on CPU."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware model used by the roofline analysis (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link (~4 links usable / chip)
+    "ici_links": 4,
+    "hbm_bytes": 16e9,
+}

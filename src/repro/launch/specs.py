@@ -1,0 +1,136 @@
+"""ShapeDtypeStruct stand-ins for every model input of every
+(architecture x shape) cell — weak-type-correct, shardable, and never
+allocating device memory.  The shardings are attached directly to the
+ShapeDtypeStructs so a plain ``jax.jit(step).lower(**specs)`` carries the
+full distribution plan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import (ModelConfig, ShapeConfig, abstract_params,
+                          init_decode_state, tree_pspecs)
+from repro.models.config import ATTN, DENSE, MOE
+from repro.models.sharding import MeshRules
+from repro.optim.adamw import adamw_init
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(rules: MeshRules, tree, pspecs):
+    return jax.tree.map(
+        lambda leaf, spec: _sds(leaf.shape, leaf.dtype, rules.named(spec)),
+        tree, pspecs)
+
+
+def param_specs(cfg: ModelConfig, rules: MeshRules):
+    """Abstract params with FSDP+TP shardings attached."""
+    aparams = abstract_params(cfg)
+    return _with_shardings(rules, aparams, tree_pspecs(rules, aparams))
+
+
+def opt_specs(cfg: ModelConfig, rules: MeshRules):
+    """AdamW moments mirror the param shardings (ZeRO-style)."""
+    aparams = abstract_params(cfg)
+    aopt = jax.eval_shape(adamw_init, aparams)
+    pspecs = tree_pspecs(rules, aparams)
+    return {
+        "m": _with_shardings(rules, aopt["m"], pspecs),
+        "v": _with_shardings(rules, aopt["v"], pspecs),
+        "step": _sds((), jnp.int32, rules.named(P())),
+    }
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules):
+    """Training / prefill batch: tokens+labels (B, S) int32, plus the
+    frontend-stub inputs ([vlm]: 3-stream M-RoPE positions; [audio]:
+    precomputed frame embeddings)."""
+    B, S = shape.global_batch, shape.seq_len
+    bsh = rules.named(rules.fit((B, S), [rules.batch_axes, None]))
+    batch = {"tokens": _sds((B, S), jnp.int32, bsh)}
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32, bsh)
+    if cfg.mrope:
+        psh = rules.named(rules.fit((3, B, S),
+                                    [None, rules.batch_axes, None]))
+        batch["positions"] = _sds((3, B, S), jnp.int32, psh)
+    if cfg.encoder_layers:
+        esh = rules.named(rules.fit(
+            (B, cfg.encoder_seq, cfg.d_model),
+            [rules.batch_axes, None, None]))
+        batch["audio_embed"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                    jnp.float32, esh)
+    return batch
+
+
+def _cache_pspec(rules: MeshRules, cfg: ModelConfig, path: str, leaf):
+    """Decode-state sharding rules (all caches carry a leading stacked
+    period axis L).
+
+    Attention KV (L,B,S,kv,hd): batch over (pod,data) when divisible and
+    kv-heads over model when divisible; with B=1 (long_500k) the cache
+    length S is sharded instead (sequence-parallel cache).
+    MLA c-cache (L,B,S,r): S over model.  Mamba states: channels/heads
+    over model.
+    """
+    shape = leaf.shape
+    bax, tp, F = rules.batch_axes, rules.tp, rules.fsdp
+    if path.endswith("pos"):
+        return P()
+    b_ok = shape[1] % max(rules.axis_size(bax), 1) == 0 if len(shape) > 1 \
+        else False
+    b = bax if b_ok else None
+
+    # which block kind does this cache belong to?
+    kind = None
+    parts = path.split("/")
+    if parts[0] == "caches" and len(parts) > 1:
+        kind = cfg.pattern[int(parts[1])]
+    elif parts[0] in ("shared_cache", "cross_kv"):
+        kind = ATTN
+
+    if kind in (DENSE, MOE, ATTN):
+        if cfg.attn_type == "mla" and parts[0] == "caches":
+            # (L, B, S, r) compressed cache
+            return rules.fit(shape, [None, b, tp, None])
+        kv_ok = shape[3] % rules.axis_size(tp) == 0
+        if b_ok:
+            return rules.fit(shape, [None, b, None if kv_ok else tp,
+                                     tp if kv_ok else None, None])
+        return rules.fit(shape, [None, None, F,
+                                 tp if kv_ok else None, None])
+    # mamba states
+    if len(shape) == 5:                        # mamba2 h (L,B,nh,hd,n)
+        return rules.fit(shape, [None, b, tp, None, None])
+    if "0" == parts[-1] or shape[-1] > cfg.ssm_state:
+        # conv state (L,B,K-1,C): channels last
+        return rules.fit(shape, [None, b, None, tp])
+    return rules.fit(shape, [None, b, tp, None])  # mamba1 h (L,B,di,n)
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       rules: MeshRules):
+    B, S = shape.global_batch, shape.seq_len
+    astate = jax.eval_shape(
+        lambda: init_decode_state(cfg, B, S,
+                                  with_encoder=bool(cfg.encoder_layers)))
+
+    def walk(path_keys, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path_keys)
+        spec = _cache_pspec(rules, cfg, path, leaf)
+        return _sds(leaf.shape, leaf.dtype, rules.named(spec))
+
+    return jax.tree_util.tree_map_with_path(walk, astate)
+
+
+def decode_token_specs(shape: ShapeConfig, rules: MeshRules):
+    B = shape.global_batch
+    sh = rules.named(rules.fit((B, 1), [rules.batch_axes, None]))
+    return _sds((B, 1), jnp.int32, sh)

@@ -1,0 +1,5 @@
+from .config import (ATTN, DENSE, MAMBA1, MAMBA2, MOE, SHAPES, ModelConfig,
+                     ShapeConfig)
+from .lm import (abstract_params, decode_step, forward, init_decode_state,
+                 init_params, loss_fn, prefill_cross_kv)
+from .sharding import MeshRules, param_spec, tree_pspecs, tree_shardings

@@ -1,0 +1,259 @@
+"""Attention blocks: GQA (covers MHA), MLA (DeepSeek compressed-KV), with
+qk-norm (Qwen3), RoPE / M-RoPE, causal & bidirectional, cross-attention,
+and single-token decode against a KV cache.
+
+Softmax and logit math in fp32; matmuls in the config compute dtype.
+Sharding is applied by the caller via with_sharding_constraint — these
+functions are layout-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (apply_mrope, apply_rope, dense_init, init_norm,
+                     rmsnorm)
+
+NEG_INF = -2.0e38
+
+
+# =====================================================================
+# GQA
+# =====================================================================
+
+def init_gqa(key, cfg: ModelConfig, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, (h, hd)),
+        "wk": dense_init(ks[1], d, (kv, hd)),
+        "wv": dense_init(ks[2], d, (kv, hd)),
+        "wo": dense_init(ks[3], h * hd, d).reshape(h, hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd)
+        p["k_norm"] = init_norm(hd)
+    return p
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _sdpa(q, k, v, mask, dtype):
+    """q: (B,S,H,hd) k/v: (B,T,H,hd); mask: (S,T) or (B,S,T) bool or None."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None]
+        else:
+            mask = mask[:, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def gqa_forward(p, cfg: ModelConfig, x, positions,
+                kv_x: Optional[jnp.ndarray] = None,
+                causal: Optional[bool] = None, rules=None,
+                rope_cache=None):
+    """Full-sequence attention (training / prefill).  ``kv_x`` switches to
+    cross-attention (no rope on k, no causal mask)."""
+    dtype = x.dtype
+    cross = kv_x is not None
+    src = kv_x if cross else x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"].astype(dtype))
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"].astype(dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if not cross:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta, cache=rope_cache)
+            k = apply_rope(k, positions, cfg.rope_theta, cache=rope_cache)
+    k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    use_causal = cfg.causal if causal is None else causal
+    # SPerf: when heads don't divide TP the S^2 work would run REPLICATED
+    # over the model axis; shard the q rows (sequence) over TP instead —
+    # each shard attends its q rows against the full (small) K/V.
+    seq_shard = (rules is not None and not cross
+                 and cfg.n_heads % max(rules.axis_size(rules.tp), 1) != 0
+                 and q.shape[1] % rules.axis_size(rules.tp) == 0)
+    if seq_shard:
+        q = rules.constrain(q, rules.batch_axes, rules.tp, None, None)
+    if cfg.attn_impl == "flash" and use_causal and not cross:
+        from repro.kernels.ops import sdpa_flash
+        out = sdpa_flash(q, k, v, causal=True)
+    else:
+        mask = None
+        if use_causal and not cross:
+            S, T = q.shape[1], k.shape[1]
+            mask = jnp.tril(jnp.ones((S, T), bool))
+        out = _sdpa(q, k, v, mask, dtype)
+    if seq_shard:   # back to batch-only sharding for the residual stream
+        out = rules.constrain(out, rules.batch_axes, None, None, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+
+
+def gqa_decode(p, cfg: ModelConfig, x, cache: Tuple, pos: jnp.ndarray,
+               cross_kv: Optional[Tuple] = None):
+    """One-token decode.  x: (B, 1, D); cache: (k, v) with shape
+    (B, S_max, kv, hd); pos: (B,) current position (tokens written at pos).
+    Returns (out, new_cache).  With ``cross_kv`` given, attends to the
+    precomputed encoder KV instead (cache passes through untouched)."""
+    dtype = x.dtype
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+    if cross_kv is not None:
+        k, v = cross_kv
+        k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+        v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+        out = _sdpa(q, k, v, None, dtype)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype)), cache
+
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if cfg.qk_norm:
+        k_new = rmsnorm(p["k_norm"], k_new)
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(pos[None], (3, B))[..., None]   # (3,B,1)
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k_new = apply_mrope(k_new, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    # scatter the new token at per-example position ``pos``
+    ck, cv = cache
+    oh = jax.nn.one_hot(pos, ck.shape[1], dtype=ck.dtype)       # (B, S)
+    ck = ck * (1 - oh[..., None, None]) + oh[..., None, None] * k_new.astype(ck.dtype)
+    cv = cv * (1 - oh[..., None, None]) + oh[..., None, None] * v_new.astype(cv.dtype)
+
+    k = _repeat_kv(ck.astype(dtype), cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(cv.astype(dtype), cfg.n_heads // cfg.n_kv_heads)
+    # mask out cache slots beyond the current position
+    valid = (jnp.arange(ck.shape[1])[None] <= pos[:, None])     # (B, S)
+    out = _sdpa(q, k, v, valid[:, None, :], dtype)              # (B,1,S) mask
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return o, (ck, cv)
+
+
+def init_gqa_cache(cfg: ModelConfig, batch, seq, dtype):
+    shape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# =====================================================================
+# MLA (DeepSeek-V2): compressed KV cache of width kv_lora_rank + rope dim
+# =====================================================================
+
+def init_mla(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    hd, rd, vd, r = cfg.head_dim, cfg.qk_rope_head_dim, cfg.v_head, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, (h, hd + rd)),        # q: nope + rope parts
+        "w_dkv": dense_init(ks[1], d, r),                # down-proj (cached)
+        "w_kr": dense_init(ks[2], d, rd),                # shared rope key
+        "w_uk": dense_init(ks[3], r, (h, hd)),           # up-proj k_nope
+        "w_uv": dense_init(ks[4], r, (h, vd)),           # up-proj v
+        "wo": dense_init(ks[5], h * vd, d).reshape(h, vd, d),
+        "kv_norm": init_norm(r),
+    }
+
+
+def _mla_qkv(p, cfg, x, c, k_rope, positions, dtype):
+    hd, rd = cfg.head_dim, cfg.qk_rope_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_nope = jnp.einsum("btr,rhk->bthk", c, p["w_uk"].astype(dtype))
+    v = jnp.einsum("btr,rhk->bthk", c, p["w_uv"].astype(dtype))
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (*k_nope.shape[:3], rd))
+    k_full = jnp.concatenate([k_nope, k_rope_b], -1)
+    return q_full, k_full, v
+
+
+def mla_forward(p, cfg: ModelConfig, x, positions):
+    dtype = x.dtype
+    c = jnp.einsum("btd,dr->btr", x, p["w_dkv"].astype(dtype))
+    c = rmsnorm(p["kv_norm"], c)
+    k_rope = jnp.einsum("btd,dr->btr", x, p["w_kr"].astype(dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    q, k, v = _mla_qkv(p, cfg, x, c, k_rope, positions, dtype)
+    S = x.shape[1]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    out = _sdpa(q, k, v, mask, dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, pos):
+    """cache: (c, k_rope) with shapes (B, S, r) / (B, S, rd) — this is the
+    whole point of MLA: the cache is rank-r, not n_heads * head_dim."""
+    dtype = x.dtype
+    cc, ckr = cache
+    c_new = jnp.einsum("btd,dr->btr", x, p["w_dkv"].astype(dtype))
+    c_new = rmsnorm(p["kv_norm"], c_new)
+    kr_new = jnp.einsum("btd,dr->btr", x, p["w_kr"].astype(dtype))
+    kr_new = apply_rope(kr_new[:, :, None, :], pos[:, None],
+                        cfg.rope_theta)[:, :, 0, :]
+    oh = jax.nn.one_hot(pos, cc.shape[1], dtype=cc.dtype)
+    cc = cc * (1 - oh[..., None]) + oh[..., None] * c_new.astype(cc.dtype)
+    ckr = ckr * (1 - oh[..., None]) + oh[..., None] * kr_new.astype(ckr.dtype)
+
+    q, k, v = _mla_qkv(p, cfg, x, cc.astype(dtype), ckr.astype(dtype),
+                       pos[:, None], dtype)
+    valid = (jnp.arange(cc.shape[1])[None] <= pos[:, None])
+    out = _sdpa(q, k, v, valid[:, None, :], dtype)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return o, (cc, ckr)
+
+
+def init_mla_cache(cfg: ModelConfig, batch, seq, dtype):
+    return (jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+            jnp.zeros((batch, seq, cfg.qk_rope_head_dim), dtype))
+
+
+# dispatchers ---------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    if cfg.attn_type == "mla" and not cross:
+        return init_mla(key, cfg)
+    return init_gqa(key, cfg, cross=cross)
+
+
+def attention_forward(p, cfg, x, positions, rules=None, rope_cache=None,
+                      **kw):
+    if cfg.attn_type == "mla":
+        return mla_forward(p, cfg, x, positions)
+    return gqa_forward(p, cfg, x, positions, rules=rules,
+                       rope_cache=rope_cache, **kw)
+
+
+def attention_decode(p, cfg, x, cache, pos, **kw):
+    if cfg.attn_type == "mla":
+        return mla_decode(p, cfg, x, cache, pos)
+    return gqa_decode(p, cfg, x, cache, pos, **kw)
+
+
+def init_cache(cfg: ModelConfig, batch, seq, dtype):
+    if cfg.attn_type == "mla":
+        return init_mla_cache(cfg, batch, seq, dtype)
+    return init_gqa_cache(cfg, batch, seq, dtype)

@@ -1,0 +1,146 @@
+"""Shared neural-net layers: norms, embeddings, rotary embeddings, MLP.
+
+Pure-pytree style: ``init_*`` returns a params dict, ``apply`` functions
+take (params, inputs).  Compute dtype follows the config; params are stored
+in fp32 (cast on use) so the optimizer sees full precision masters.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Init = jax.nn.initializers
+
+
+def dense_init(key, in_dim, out_shape, scale: Optional[float] = None):
+    """Truncated-normal fan-in init; out_shape may be a tuple (fused heads)."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    std = scale if scale is not None else in_dim ** -0.5
+    return std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (in_dim, *out_shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- norms ---
+
+def init_norm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def init_layernorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * p["scale"]).astype(dt)
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+            + p["bias"]).astype(dt)
+
+
+def apply_norm(kind: str, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def init_norm_for(kind: str, d):
+    return init_norm(d) if kind == "rmsnorm" else init_layernorm(d)
+
+
+# ----------------------------------------------------------------- MLP ----
+
+def init_mlp(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff),
+        "wi_up": dense_init(k2, d_model, d_ff),
+        "wo": dense_init(k3, d_ff, d_model),
+    }
+
+
+def mlp(p, x, dtype):
+    gate = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dtype))
+    up = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dtype))
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+
+
+# ------------------------------------------------------------- rotary -----
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32)
+                            / head_dim))
+
+
+def make_rope_cache(positions: jnp.ndarray, head_dim: int, theta: float):
+    """Precompute (cos, sin) ONCE per forward pass (§Perf C2: positions are
+    identical for every layer; computing sin/cos inside the layer scan
+    re-materializes two f32 (B,S,hd/2) tensors per layer)."""
+    freqs = rope_freqs(head_dim, theta)                 # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    angles = angles[..., None, :]                       # broadcast over heads
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               cache=None) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S) int32 (ignored when a
+    precomputed ``cache`` = (cos, sin) is given)."""
+    hd = x.shape[-1]
+    if cache is None:
+        cache = make_rope_cache(positions, hd, theta)
+    cos, sin = cache
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE.  positions3: (3, ..., S) — temporal/height/width
+    position streams; the rotary half-dims are split into ``sections``
+    (sum == hd/2), each rotated with its own stream."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # select the position stream per frequency-section:
+    # positions3: (3, B, S) -> pos_sel: (B, S, hd/2)
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=hd // 2)
+    p3 = positions3.astype(jnp.float32)
+    pos_sel = p3[sec_id]                                # (hd/2, B, S)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)              # (B, S, hd/2)
+    angles = pos_sel * freqs                            # (B, S, hd/2)
+    angles = angles[..., None, :]                       # (B, S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ embedding ---
+
+def init_embedding(key, vocab, d_model):
+    return {"table": 0.02 * jax.random.normal(key, (vocab, d_model),
+                                              jnp.float32)}
+
+
+def embed(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p, x, dtype):
+    """Logits via the (tied or separate) vocab projection, fp32 out."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(dtype),
+                      p["table"].astype(dtype)).astype(jnp.float32)

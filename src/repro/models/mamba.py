@@ -1,0 +1,328 @@
+"""Mamba-1 (S6 selective scan) and Mamba-2 (SSD, scalar-decay heads)
+blocks, with O(1)-state single-token decode — this is what makes the
+``long_500k`` cell runnable for falcon-mamba / zamba2 when full attention
+is quadratic-history.
+
+Sequence mixing uses ``jax.lax.associative_scan`` over the time axis
+(parallel prefix — TPU-friendly log-depth instead of a 4096-step serial
+loop).  The recurrence h_t = a_t * h_{t-1} + b_t is associative in
+(a, b):  (a2, b2) ∘ (a1, b1) = (a1*a2, a2*b1 + b2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def _ssm_scan(decay, inp):
+    """Associative scan of h_t = decay_t * h_{t-1} + inp_t along axis 1.
+    decay/inp: (B, L, ...) same shape."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+    return h
+
+
+def _chunked_ssm(decay, drive, Cc, chunk: int):
+    """Memory-bounded SSM: scan over chunks of the time axis; inside a
+    chunk, a log-depth associative scan materializes h for only ``chunk``
+    steps, contracts with C immediately, and carries the boundary state.
+
+    decay/drive: (B, L, *state_shape) — state_shape e.g. (di, n) for
+    mamba1, (nh, hd, n) for mamba2.  Cc: (B, L, n).
+    Returns y: (B, L, *state_shape[:-1]) — h contracted over the last
+    (state) axis.
+    """
+    B, L = drive.shape[:2]
+    state_shape = drive.shape[2:]
+    ck = min(chunk, L)
+    pad = (-L) % ck
+    if pad:
+        zpad = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        decay, drive, Cc = zpad(decay), zpad(drive), zpad(Cc)
+    nc = (L + pad) // ck
+
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.reshape(B, nc, ck, *x.shape[2:]), 1, 0)      # (nc, B, ck, ...)
+
+    dec_c, drv_c, C_c = to_chunks(decay), to_chunks(drive), to_chunks(Cc)
+    h0 = jnp.zeros((B, *state_shape), drive.dtype)
+
+    def body(h, xs):
+        d, dr, cc = xs                                     # (B, ck, ...)
+        h_rel = _ssm_scan(d, dr)
+        cum = jnp.cumprod(d, axis=1)                       # prod of decays
+        h_abs = h_rel + cum * h[:, None]
+        y = jnp.einsum("bl...n,bln->bl...", h_abs, cc)
+        return h_abs[:, -1], y
+
+    _, ys = jax.lax.scan(body, h0, (dec_c, drv_c, C_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L + pad, *state_shape[:-1])
+    return y[:, :L]
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv1d.  x: (B, L, C), w: (C, K).
+    With ``state`` (B, K-1, C) given, performs the streaming update and
+    returns (y, new_state)."""
+    K = w.shape[1]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # y[b, t, c] = sum_k pad[b, t+k, c] * w[c, k]
+    y = sum(pad[:, k:k + x.shape[1], :] * w[:, k].astype(x.dtype)
+            for k in range(K))
+    if state is None:
+        return y
+    return y, pad[:, -(K - 1):, :]
+
+
+# ====================================================================
+# Mamba-1
+# ====================================================================
+
+def init_mamba1(key, cfg: ModelConfig):
+    d, di, n, kk = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    ks = jax.random.split(key, 6)
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (di, kk), jnp.float32),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * n),
+        "dt_proj": dense_init(ks[3], dt_rank, di),
+        "dt_bias": jnp.zeros((di,), jnp.float32) - 4.6,   # softplus ~ 0.01
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d),
+    }
+
+
+def _mamba1_ssm_inputs(p, xc, dtype):
+    """Shared between train & decode: B, C, dt from the conv output."""
+    di, n = p["A_log"].shape
+    dt_rank = p["x_proj"].shape[1] - 2 * n
+    proj = jnp.einsum("bld,de->ble", xc, p["x_proj"].astype(dtype))
+    dt_in, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt_in, p["dt_proj"].astype(dtype))
+        .astype(jnp.float32) + p["dt_bias"])               # (B, L, di)
+    A = -jnp.exp(p["A_log"])                               # (di, n)
+    decay = jnp.exp(dt[..., None] * A)                     # (B, L, di, n)
+    drive = (dt[..., None] * Bc[:, :, None, :].astype(jnp.float32)
+             * xc[..., None].astype(jnp.float32))          # (B, L, di, n)
+    return decay, drive, Cc
+
+
+def mamba1_forward(p, cfg: ModelConfig, x):
+    """x: (B, L, D) -> (B, L, D)."""
+    dtype = x.dtype
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dtype))
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xr, p["conv_w"]))
+    decay, drive, Cc = _mamba1_ssm_inputs(p, xc, dtype)
+    y = _chunked_ssm(decay, drive, Cc.astype(jnp.float32), chunk=64)
+    y = (y + p["D"] * xc.astype(jnp.float32)).astype(dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(dtype))
+
+
+def mamba1_decode(p, cfg: ModelConfig, x, state):
+    """x: (B, 1, D); state: (conv_state (B, K-1, di), h (B, di, n))."""
+    dtype = x.dtype
+    conv_s, h = state
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dtype))
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_s = _causal_conv(xr, p["conv_w"], conv_s)
+    xc = jax.nn.silu(xc)
+    decay, drive, Cc = _mamba1_ssm_inputs(p, xc, dtype)
+    h = decay[:, 0] * h + drive[:, 0]                      # (B, di, n)
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))
+    y = (y + p["D"] * xc[:, 0].astype(jnp.float32)).astype(dtype)[:, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(dtype))
+    return out, (conv_s, h)
+
+
+def init_mamba1_state(cfg: ModelConfig, batch, dtype):
+    di, n = cfg.d_inner, cfg.ssm_state
+    return (jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+            jnp.zeros((batch, di, n), jnp.float32))
+
+
+# ====================================================================
+# Mamba-2 (SSD): per-head scalar decay, outer-product state (hd x n)
+# ====================================================================
+
+def init_mamba2(key, cfg: ModelConfig):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input proj -> [x(di), z(di), B(n), C(n), dt(nh)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + nh),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (di + 2 * n, cfg.d_conv),
+                                          jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32) - 4.6,
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d),
+    }
+
+
+def _mamba2_parts(p, cfg, zxbcdt, conv_state=None):
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    z, xbc, dt_in = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    if conv_state is None:
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"]))
+        new_conv = None
+    else:
+        xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+        xbc = jax.nn.silu(xbc)
+    xr, Bc, Cc = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # (B,L,nh)
+    a = -jnp.exp(p["A_log"])                                        # (nh,)
+    decay = jnp.exp(dt * a)                                         # (B,L,nh)
+    return z, xr, Bc, Cc, dt, decay, new_conv
+
+
+def _ssd_chunked(xh, Bc, Cc, dt, decay, chunk: int):
+    """Mamba-2 SSD block decomposition (matmul form — MXU-friendly).
+
+    Per chunk of length c (per head, scalar decay a_t):
+      g        = cumsum(log a)                      (c,)
+      L[i, j]  = exp(g_i - g_j) for j <= i else 0   (c, c)
+      Y_intra  = ((C B^T) o L) @ (dt * x)           2 GEMMs on the MXU
+      Y_inter  = exp(g) * (C @ h_in^T)              1 GEMM
+      h_out    = exp(g_c) h_in + X^T diag(exp(g_c - g) dt) B
+
+    vs the elementwise associative scan this trades the (B, c, nh, hd, n)
+    f32 state tensor for (c, c)-per-head logits — the dominant
+    memory-term cut for the zamba2 cells (§Perf).
+    xh: (B, L, nh, hd) f32; Bc/Cc: (B, L, n); dt/decay: (B, L, nh).
+    Returns y: (B, L, nh, hd).
+    """
+    B_, L, nh, hd = xh.shape
+    n = Bc.shape[-1]
+    ck = min(chunk, L)
+    pad = (-L) % ck
+    if pad:
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)]
+                                 + [(0, 0)] * (t.ndim - 2))
+        xh, Bc, Cc, dt, decay = map(zpad, (xh, Bc, Cc, dt, decay))
+        # padded decay=0 -> log blows up; clamp to 1 (state just carries)
+        decay = decay.at[:, L:].set(1.0)
+        nonpad = jnp.zeros_like(dt).at[:, :L].set(1.0)
+        dt = dt * nonpad
+    nc = (L + pad) // ck
+
+    def chunks(t):
+        return t.reshape(B_, nc, ck, *t.shape[2:])
+
+    xh_c, B_c, C_c, dt_c, dec_c = map(chunks, (xh, Bc, Cc, dt, decay))
+    g = jnp.cumsum(jnp.log(jnp.maximum(dec_c, 1e-37)), axis=2)  # (B,nc,c,nh)
+    # intra-chunk: T[i,j] = exp(g_i - g_j) masked causal, per head
+    rel = g[:, :, :, None, :] - g[:, :, None, :, :]             # (B,nc,c,c,nh)
+    causal = jnp.tril(jnp.ones((ck, ck), bool))[None, None, :, :, None]
+    Lmat = jnp.where(causal, jnp.exp(rel), 0.0)
+    CB = jnp.einsum("bkin,bkjn->bkij", C_c.astype(jnp.float32),
+                    B_c.astype(jnp.float32))                    # (B,nc,c,c)
+    M = CB[..., None] * Lmat                                    # (B,nc,c,c,nh)
+    Xdt = xh_c * dt_c[..., None]                                # (B,nc,c,nh,hd)
+    y_intra = jnp.einsum("bkijh,bkjhd->bkihd", M, Xdt)
+
+    # inter-chunk: scan the (nh, hd, n) state across chunks
+    glast = g[:, :, -1:, :]                                     # (B,nc,1,nh)
+    wexp = jnp.exp(glast - g)                                   # (B,nc,c,nh)
+    # h_chunk[k] = sum_i exp(g_last - g_i) dt_i x_i B_i^T   (B,nc,nh,hd,n)
+    h_chunk = jnp.einsum("bkihd,bkin->bkhdn", Xdt * wexp[..., None],
+                         B_c.astype(jnp.float32))
+
+    dec_chunk = jnp.exp(glast[:, :, 0, :])                      # (B,nc,nh)
+
+    def body(h, xs):
+        dk, hk, gk, ck_ = xs          # per-chunk tensors (B, ...)
+        y_inter = jnp.einsum("bin,bhdn,bih->bihd",
+                             ck_.astype(jnp.float32), h, jnp.exp(gk))
+        h = dk[..., None, None] * h + hk
+        return h, y_inter
+
+    h0 = jnp.zeros((B_, nh, hd, n), jnp.float32)
+    xs = (jnp.moveaxis(dec_chunk, 1, 0), jnp.moveaxis(h_chunk, 1, 0),
+          jnp.moveaxis(g, 1, 0), jnp.moveaxis(C_c, 1, 0))
+    _, y_inter = jax.lax.scan(body, h0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    y = y.reshape(B_, L + pad, nh, hd)
+    return y[:, :L]
+
+
+def mamba2_forward(p, cfg: ModelConfig, x):
+    dtype = x.dtype
+    di, n = cfg.d_inner, cfg.ssm_state
+    hd = cfg.mamba_headdim
+    nh = di // hd
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dtype))
+    z, xr, Bc, Cc, dt, decay, _ = _mamba2_parts(p, cfg, zxbcdt)
+    B_, L = x.shape[:2]
+    xh = xr.reshape(B_, L, nh, hd).astype(jnp.float32)
+    if cfg.ssm_impl == "ssd":
+        y = _ssd_chunked(xh, Bc.astype(jnp.float32),
+                         Cc.astype(jnp.float32), dt, decay, chunk=64)
+    else:
+        # elementwise associative-scan reference path
+        drive = (dt[..., None, None] * xh[..., None]
+                 * Bc[:, :, None, None, :].astype(jnp.float32))
+        decay_b = jnp.broadcast_to(decay[..., None, None], drive.shape)
+        y = _chunked_ssm(decay_b, drive, Cc.astype(jnp.float32), chunk=64)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B_, L, di).astype(dtype)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_scale"]).astype(dtype)
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(dtype))
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, state):
+    dtype = x.dtype
+    di, n = cfg.d_inner, cfg.ssm_state
+    hd = cfg.mamba_headdim
+    nh = di // hd
+    conv_s, h = state
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dtype))
+    z, xr, Bc, Cc, dt, decay, conv_s = _mamba2_parts(p, cfg, zxbcdt, conv_s)
+    B_ = x.shape[0]
+    xh = xr[:, 0].reshape(B_, nh, hd).astype(jnp.float32)
+    drive = (dt[:, 0, :, None, None] * xh[..., None]
+             * Bc[:, 0, None, None, :].astype(jnp.float32))
+    h = decay[:, 0, :, None, None] * h + drive                # (B,nh,hd,n)
+    y = jnp.einsum("bhdn,bn->bhd", h, Cc[:, 0].astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B_, 1, di).astype(dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_scale"]).astype(dtype)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(dtype))
+    return out, (conv_s, h)
+
+
+def init_mamba2_state(cfg: ModelConfig, batch, dtype):
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    return (jnp.zeros((batch, cfg.d_conv - 1, di + 2 * n), dtype),
+            jnp.zeros((batch, nh, cfg.mamba_headdim, n), jnp.float32))

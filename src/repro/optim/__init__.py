@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .compression import (compress_int8, decompress_int8,
+                          error_feedback_compress)

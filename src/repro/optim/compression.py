@@ -1,0 +1,61 @@
+"""Gradient compression for the data-parallel all-reduce: int8 block
+quantization with error feedback.
+
+Composable with the s-step deferred all-reduce (``train.defer_s``): the
+deferred accumulator is quantized once per sync instead of per microbatch,
+so the bandwidth saving multiplies the paper-style latency saving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _blockify(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def compress_int8(x):
+    """-> (q: int8 blocks, scale: f32 per block, meta) with |err| <= scale/254."""
+    blocks, pad = _blockify(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, (x.shape, pad)
+
+
+def decompress_int8(q, scale, meta):
+    shape, pad = meta
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def error_feedback_compress(grads, residual):
+    """Quantize (grads + residual); the quantization error becomes the new
+    residual (error feedback keeps the compressed SGD unbiased over time).
+    Returns (decompressed-after-roundtrip grads, new_residual).  In a real
+    deployment the int8 payload is what crosses the network; here the
+    roundtrip models it exactly."""
+
+    def one(g, r):
+        tot = g.astype(jnp.float32) + r
+        q, s, meta = compress_int8(tot)
+        deq = decompress_int8(q, s, meta)
+        return deq.astype(g.dtype), tot - deq
+
+    g_flat, treedef = jax.tree.flatten(grads)
+    r_flat = treedef.flatten_up_to(residual)
+    pairs = [one(g, r) for g, r in zip(g_flat, r_flat)]
+    deq = treedef.unflatten([t[0] for t in pairs])
+    new_r = treedef.unflatten([t[1] for t in pairs])
+    return deq, new_r
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

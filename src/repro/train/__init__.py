@@ -1,0 +1,4 @@
+from .train_step import TrainConfig, make_train_step, make_defer_train_step
+from .serve_step import make_serve_step, greedy_generate
+from .checkpoint import (CheckpointManager, load_checkpoint,
+                         save_checkpoint)

@@ -1,0 +1,47 @@
+"""Serving: jitted single-token decode step + a simple generation loop.
+
+The decode step is what the ``decode_32k`` / ``long_500k`` dry-run cells
+lower: one new token against a KV cache (or SSM state) of ``seq_len``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step
+from repro.models.sharding import MeshRules
+
+
+def make_serve_step(cfg: ModelConfig, rules: Optional[MeshRules] = None,
+                    temperature: float = 0.0):
+    """(params, state, tokens(B,1), key) -> (next_tokens(B,1), state)."""
+
+    def step(params, state, tokens, key):
+        logits, state = decode_step(params, cfg, state, tokens, rules=rules)
+        if temperature > 0.0:
+            nxt = jax.random.categorical(key, logits / temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        return nxt[:, None].astype(jnp.int32), state
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def greedy_generate(params, cfg: ModelConfig, state, prompt, n_tokens: int,
+                    rules=None, temperature: float = 0.0, key=None):
+    """Feed ``prompt`` (B, P) token-by-token, then generate ``n_tokens``."""
+    step = make_serve_step(cfg, rules, temperature)
+    key = key if key is not None else jax.random.key(0)
+    B, P = prompt.shape
+    tok = prompt[:, :1]
+    outs = []
+    for t in range(P + n_tokens - 1):
+        key, sub = jax.random.split(key)
+        nxt, state = step(params, state, tok, sub)
+        tok = prompt[:, t + 1:t + 2] if t + 1 < P else nxt
+        if t + 1 >= P:
+            outs.append(tok)
+    return jnp.concatenate(outs, axis=1) if outs else prompt[:, :0], state

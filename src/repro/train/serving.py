@@ -1,0 +1,124 @@
+"""Continuous-batching serving engine.
+
+Production serving runs a fixed-shape decode step (jit-compiled once) over
+a slot matrix; requests stream in and out of slots between steps:
+
+  * admit: a free slot gets the new request's prompt (teacher-forced
+    prefill via the same decode step — no separate prefill graph needed
+    at this scale);
+  * step: one batched decode for all active slots;
+  * retire: slots whose sequence hit EOS / max length free up.
+
+State (KV caches / SSM states) is slot-indexed, so admissions never
+reshape or recompile anything — the fixed (B_slots, S_max) decode step is
+what the decode_32k / long_500k dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step, init_decode_state
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, n_slots: int = 4,
+                 max_seq: int = 128, eos_id: Optional[int] = None,
+                 rules=None):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.state = init_decode_state(cfg, n_slots, max_seq,
+                                       with_encoder=bool(cfg.encoder_layers))
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.pending: List[Request] = []
+        # per-slot cursor into the prompt (-1 = generating)
+        self._prompt_pos = [0] * n_slots
+        self._tokens = jnp.zeros((n_slots, 1), jnp.int32)
+
+        def step(params, state, tokens):
+            logits, state = decode_step(params, cfg, state, tokens,
+                                        rules=rules)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return nxt, state
+
+        self._step = jax.jit(step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _reset_slot_state(self, i):
+        """Zero the caches of slot i (cheap: masked where on slot axis)."""
+        def zero_slot(x):
+            if x.ndim >= 2 and x.shape[1] == self.n_slots:   # (L, B, ...)
+                mask = (jnp.arange(self.n_slots) == i)
+                mask = mask.reshape((1, self.n_slots) + (1,) * (x.ndim - 2))
+                return jnp.where(mask, jnp.zeros_like(x), x)
+            return x
+        st = {k: jax.tree.map(zero_slot, v) for k, v in self.state.items()
+              if k != "pos"}
+        st["pos"] = self.state["pos"].at[i].set(0)
+        self.state = st
+
+    def _admit(self):
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self.slots[i] = req
+                self._reset_slot_state(i)
+                self._prompt_pos[i] = 0
+                self._tokens = self._tokens.at[i, 0].set(req.prompt[0])
+
+    def step(self) -> Dict[int, int]:
+        """One engine step.  Returns {rid: emitted_token} for slots that
+        produced a NEW (non-prompt) token this step."""
+        self._admit()
+        if all(s is None for s in self.slots):
+            return {}
+        nxt, self.state = self._step(self.params, self.state, self._tokens)
+        emitted = {}
+        nxt_host = jax.device_get(nxt)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pp = self._prompt_pos[i]
+            if pp >= 0 and pp + 1 < len(req.prompt):
+                # still teacher-forcing the prompt
+                self._prompt_pos[i] = pp + 1
+                self._tokens = self._tokens.at[i, 0].set(req.prompt[pp + 1])
+                continue
+            self._prompt_pos[i] = -1
+            tok = int(nxt_host[i])
+            req.generated.append(tok)
+            emitted[req.rid] = tok
+            self._tokens = self._tokens.at[i, 0].set(tok)
+            seq_len = int(self.state["pos"][i])
+            if (len(req.generated) >= req.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)
+                    or seq_len >= self.max_seq - 1):
+                req.done = True
+                self.slots[i] = None
+        return emitted
+
+    def run_until_done(self, max_steps: int = 10000):
+        out = []
+        for _ in range(max_steps):
+            if not self.pending and all(s is None for s in self.slots):
+                break
+            self.step()
+        return out

@@ -1,0 +1,100 @@
+"""Checkpoint + fault-tolerance tests: atomic save, resume-latest, GC,
+async writer, elastic restore, and bit-exact preemption recovery of a real
+training loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.models import init_params
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import (CheckpointManager, load_checkpoint,
+                         make_train_step, save_checkpoint)
+from repro.train.train_step import TrainConfig
+
+
+def _tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3),
+            "blocks": ({"w": jnp.ones((4,))}, {"w": 2 * jnp.ones((4,))}),
+            "step": jnp.int32(7)}
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    got, meta = load_checkpoint(str(tmp_path), template=t)
+    assert meta["step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_latest_ignores_partial(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    save_checkpoint(str(tmp_path), 5, t)
+    # a torn write (crash mid-save) must be invisible
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    _, meta = load_checkpoint(str(tmp_path), template=t)
+    assert meta["step"] == 5
+
+
+def test_manager_gc_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2, save_every=10)
+    t = _tree()
+    for s in (10, 20, 30, 40):
+        assert mgr.should_save(s)
+        mgr.save_async(s, t)
+    mgr.wait()
+    from repro.train.checkpoint import available_steps
+    assert available_steps(str(tmp_path)) == [30, 40]
+    got, meta = mgr.restore_latest(template=t)
+    assert meta["step"] == 40
+
+
+def test_preemption_resume_bit_exact(tmp_path):
+    """Train 6 steps; separately train 3, checkpoint, 'preempt', restore,
+    train 3 more — final params must match bit-for-bit (deterministic
+    index-derived data pipeline + checkpointed opt state)."""
+    cfg = get_config("qwen3_1p7b", reduced=True)
+    acfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    tcfg = TrainConfig()
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=8,
+                         global_batch=4, seed=0)
+    step_fn = make_train_step(cfg, acfg, tcfg)
+
+    def train(params, opt, s0, s1):
+        for s in range(s0, s1):
+            params, opt, _ = step_fn(params, opt, pipe.batch(s))
+        return params, opt
+
+    p0 = init_params(jax.random.key(0), cfg)
+    o0 = adamw_init(p0)
+    ref_p, _ = train(p0, o0, 0, 6)
+
+    p = init_params(jax.random.key(0), cfg)
+    o = adamw_init(p)
+    p, o = train(p, o, 0, 3)
+    save_checkpoint(str(tmp_path), 3, {"params": p, "opt": o})
+    del p, o                                     # the preemption
+    restored, meta = load_checkpoint(
+        str(tmp_path), template={"params": p0, "opt": adamw_init(p0)})
+    p2, o2 = train(restored["params"], restored["opt"], meta["step"], 6)
+
+    for a, b in zip(jax.tree.leaves(ref_p), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Checkpoint written replicated restores onto a sharded layout (the
+    1-device degenerate case exercises the device_put path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    t = {"w": jnp.arange(8.0)}
+    save_checkpoint(str(tmp_path), 1, t)
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    got, _ = load_checkpoint(str(tmp_path), template=t, shardings=sh)
+    assert got["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(8.0))

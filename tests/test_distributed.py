@@ -1,0 +1,29 @@
+"""Distributed == serial, on an 8-device (2 data x 4 model) host mesh.
+
+Runs in a subprocess because --xla_force_host_platform_device_count must be
+set before jax initializes, and the main pytest process must keep seeing a
+single device (per the dry-run contract)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+WORKER = str(pathlib.Path(__file__).resolve().parent / "dist_worker.py")
+
+
+def test_main_process_sees_one_device():
+    """Smoke tests and benches must NOT inherit the 512-device dry-run env."""
+    assert jax.device_count() == 1
+
+
+def test_distributed_solvers_match_serial():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, WORKER], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL-OK" in out.stdout

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED config of each family, run one forward + one train-grad step and a
+few decode steps on CPU; assert shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn, prefill_cross_kv)
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    k1, k2 = jax.random.split(key)
+    batch = {
+        "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.mrope:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        batch["positions"] = jnp.stack([pos, pos // 4, pos % 4])
+    if cfg.encoder_layers:
+        batch["audio_embed"] = jax.random.normal(
+            jax.random.fold_in(key, 7), (B, cfg.encoder_seq, cfg.d_model),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_grad(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+
+    logits = forward(params, cfg, batch["tokens"],
+                     positions=batch.get("positions"),
+                     audio_embed=batch.get("audio_embed"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss={loss}"
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    # gradient must reach the embedding and at least one block param
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in leaves)
+    assert gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode logits must match the training forward pass
+    position-by-position (validates KV caches / SSM streaming states).
+
+    MoE archs are pinned to dense dispatch here: capacity dispatch can
+    drop overflow tokens at prefill (per-row capacity) but never at
+    decode (S=1) — the standard train/serve routing drift of
+    capacity-based MoE, not a cache bug."""
+    import dataclasses
+    cfg = get_config(arch, reduced=True)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_impl="dense")
+    if cfg.mrope:
+        pytest.skip("M-RoPE decode uses 3D positions; covered separately")
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    toks = batch["tokens"]
+
+    ref = forward(params, cfg, toks,
+                  audio_embed=batch.get("audio_embed"))
+
+    state = init_decode_state(cfg, B, S, with_encoder=bool(cfg.encoder_layers))
+    if cfg.encoder_layers:
+        state["cross_kv"] = prefill_cross_kv(params, cfg,
+                                             batch["audio_embed"])
+    outs = []
+    for t in range(S):
+        logits, state = decode_step(params, cfg, state, toks[:, t:t + 1])
+        outs.append(logits)
+    got = jnp.stack(outs, axis=1)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_param_count_sanity():
+    """Full-config analytic param counts are in the advertised ballpark."""
+    expect = {
+        "llama3_405b": (350e9, 480e9),
+        # assigned dims (52L x 6144 x 24576, untied 49k vocab) -> 28.2B
+        "granite_20b": (15e9, 30e9),
+        "yi_6b": (5e9, 8e9),
+        "qwen3_1p7b": (1.2e9, 2.6e9),
+        "zamba2_1p2b": (0.8e9, 1.8e9),
+        "qwen2_vl_72b": (60e9, 85e9),
+        "deepseek_v2_lite_16b": (12e9, 20e9),
+        "arctic_480b": (380e9, 560e9),
+        "falcon_mamba_7b": (5e9, 9e9),
+        "whisper_tiny": (20e6, 80e6),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]B"
+
+
+def test_reduced_configs_preserve_family_traits():
+    for arch in ARCHS:
+        full, red = get_config(arch), get_config(arch, reduced=True)
+        assert full.pattern == red.pattern or len(full.pattern) == len(red.pattern)
+        assert full.attn_type == red.attn_type
+        assert bool(full.n_experts) == bool(red.n_experts)
+        assert full.qk_norm == red.qk_norm
+        assert full.mrope == red.mrope
+        assert bool(full.encoder_layers) == bool(red.encoder_layers)
+        assert bool(full.shared_attn_every) == bool(red.shared_attn_every)
+
+
+def test_mrope_decode_matches_prefill_when_streams_align():
+    """qwen2-vl decode uses (t,t,t) position streams; with the same
+    streams at train time the teacher-forced decode must match prefill."""
+    import numpy as np
+    from repro.models import decode_step, forward, init_decode_state
+    cfg = get_config("qwen2_vl_72b", reduced=True)
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pos3 = jnp.stack([pos, pos, pos])
+    ref = forward(params, cfg, toks, positions=pos3)
+
+    state = init_decode_state(cfg, B, S)
+    outs = []
+    for t in range(S):
+        logits, state = decode_step(params, cfg, state, toks[:, t:t + 1])
+        outs.append(logits)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,66 @@
+"""Nystrom approximation (paper's future work): error decreases with the
+number of landmarks; Nystrom-BDCD solves the approximated K-RR problem and
+approaches the exact solution as l -> m; composes with the s-step solver
+unchanged."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (KernelConfig, KRRConfig, bdcd_krr, block_schedule,
+                        krr_closed_form, relative_solution_error,
+                        sstep_bdcd_krr)
+from repro.core.kernels import gram_slab
+from repro.core.nystrom import (choose_landmarks, nystrom_kernel_error,
+                                nystrom_krr_setup, nystrom_map)
+from repro.data.synthetic import regression_dataset
+
+
+def test_error_decreases_with_landmarks():
+    A, _ = regression_dataset(jax.random.key(0), 128, 6)
+    cfg = KernelConfig("rbf", sigma=1.0)
+    errs = []
+    for l in (8, 32, 96):
+        L = choose_landmarks(jax.random.key(1), A, l)
+        errs.append(nystrom_kernel_error(A, L, cfg))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 0.15
+
+
+def test_full_rank_nystrom_is_exact():
+    """With l = m (all points as landmarks) the approximation is exact."""
+    A, _ = regression_dataset(jax.random.key(2), 48, 5)
+    cfg = KernelConfig("rbf", sigma=0.7)
+    Phi = nystrom_map(A, A, cfg)
+    K = gram_slab(A, A, cfg)
+    np.testing.assert_allclose(np.asarray(Phi @ Phi.T), np.asarray(K),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_nystrom_bdcd_approaches_exact_krr():
+    m = 96
+    A, y = regression_dataset(jax.random.key(3), m, 6)
+    cfg = KRRConfig(lam=1.0, kernel=KernelConfig("rbf", sigma=1.0))
+    astar = krr_closed_form(A, y, cfg)
+
+    sched = block_schedule(jax.random.key(4), 256, m, 8)
+    errs = []
+    for l in (16, 88):
+        Phi, lin_cfg = nystrom_krr_setup(jax.random.key(5), A, cfg, l)
+        a, _ = bdcd_krr(Phi, y, jnp.zeros(m), sched, lin_cfg)
+        errs.append(float(relative_solution_error(a, astar)))
+    assert errs[1] < errs[0]            # more landmarks -> closer to exact
+    assert errs[1] < 0.1
+
+
+def test_nystrom_composes_with_sstep():
+    """s-step BDCD on the Nystrom features == classical BDCD on them
+    (the paper's schedule is orthogonal to the approximation)."""
+    m = 64
+    A, y = regression_dataset(jax.random.key(6), m, 6)
+    cfg = KRRConfig(lam=0.5, kernel=KernelConfig("rbf"))
+    Phi, lin_cfg = nystrom_krr_setup(jax.random.key(7), A, cfg, 24)
+    sched = block_schedule(jax.random.key(8), 64, m, 4)
+    a1, _ = bdcd_krr(Phi, y, jnp.zeros(m), sched, lin_cfg)
+    a2, _ = sstep_bdcd_krr(Phi, y, jnp.zeros(m), sched, lin_cfg, s=16)
+    np.testing.assert_allclose(np.asarray(a2), np.asarray(a1),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,121 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (KernelConfig, KRRConfig, SVMConfig, bdcd_krr,
+                        block_schedule, coordinate_schedule, dcd_ksvm,
+                        ksvm_dual_objective, sstep_bdcd_krr, sstep_dcd_ksvm)
+from repro.core.kernels import gram_slab
+from repro.core.perf_model import (Machine, Problem, bdcd_cost,
+                                   sstep_bdcd_cost)
+from repro.data.synthetic import classification_dataset, regression_dataset
+
+KERN = [KernelConfig("linear"), KernelConfig("polynomial", 2, 1.0),
+        KernelConfig("rbf", sigma=0.5)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(8, 48), n=st.integers(2, 32), kidx=st.integers(0, 2),
+       seed=st.integers(0, 10))
+def test_gram_slab_psd_diag(m, n, kidx, seed):
+    """K(A, A) must be symmetric; RBF diag == 1; linear/poly PSD-ish."""
+    A, _ = classification_dataset(jax.random.key(seed), m, n)
+    K = gram_slab(A, A, KERN[kidx])
+    np.testing.assert_allclose(np.asarray(K), np.asarray(K).T, atol=1e-4)
+    if KERN[kidx].name == "rbf":
+        np.testing.assert_allclose(np.asarray(jnp.diagonal(K)), 1.0,
+                                   atol=1e-5)
+        assert float(K.min()) >= 0.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100), s=st.sampled_from([2, 4, 8, 16]),
+       loss=st.sampled_from(["l1", "l2"]), kidx=st.integers(0, 2))
+def test_sstep_dcd_equivalence_property(seed, s, loss, kidx):
+    """INVARIANT (paper Thm): s-step DCD == DCD for ANY schedule/kernel."""
+    m, n, H = 32, 8, 16
+    A, y = classification_dataset(jax.random.key(seed), m, n)
+    cfg = SVMConfig(C=0.5, loss=loss, kernel=KERN[kidx])
+    sched = coordinate_schedule(jax.random.key(seed + 1), H, m)
+    a0 = jnp.zeros(m)
+    a1, _ = dcd_ksvm(A, y, a0, sched, cfg)
+    a2, _ = sstep_dcd_ksvm(A, y, a0, sched, cfg, s=s)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100), s=st.sampled_from([2, 4, 8]),
+       b=st.integers(1, 4))
+def test_sstep_bdcd_equivalence_property(seed, s, b):
+    m, n, H = 32, 8, 8
+    A, y = regression_dataset(jax.random.key(seed), m, n)
+    cfg = KRRConfig(lam=0.8, kernel=KERN[seed % 3])
+    sched = block_schedule(jax.random.key(seed + 1), H, m, b)
+    a0 = jnp.zeros(m)
+    a1, _ = bdcd_krr(A, y, a0, sched, cfg)
+    a2, _ = sstep_bdcd_krr(A, y, a0, sched, cfg, s=s)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_dcd_feasibility_invariant(seed):
+    """0 <= alpha_i <= C must hold at every DCD/s-step iterate (L1)."""
+    m, n = 24, 6
+    A, y = classification_dataset(jax.random.key(seed), m, n)
+    cfg = SVMConfig(C=0.7, loss="l1", kernel=KERN[seed % 3])
+    sched = coordinate_schedule(jax.random.key(seed + 5), 32, m)
+    a, _ = sstep_dcd_ksvm(A, y, jnp.zeros(m), sched, cfg, s=8)
+    assert float(a.min()) >= -1e-6
+    assert float(a.max()) <= 0.7 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), h=st.integers(1, 8))
+def test_dcd_monotone_dual_decrease(seed, h):
+    """Exact coordinate minimization can never increase the dual."""
+    m, n = 24, 6
+    A, y = classification_dataset(jax.random.key(seed), m, n)
+    cfg = SVMConfig(C=1.0, loss="l2", kernel=KernelConfig("rbf"))
+    sched = coordinate_schedule(jax.random.key(seed + 9), 8 * h, m)
+    a0 = jnp.zeros(m)
+    prev = float(ksvm_dual_objective(A, y, a0, cfg))
+    a, _ = dcd_ksvm(A, y, a0, sched, cfg)
+    cur = float(ksvm_dual_objective(A, y, a, cfg))
+    assert cur <= prev + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.sampled_from([2, 4, 8, 16, 32]), P=st.sampled_from([2, 8, 64]),
+       b=st.integers(1, 8))
+def test_perf_model_invariants(s, P, b):
+    """Theorem 2 invariants: s-step moves the SAME total words, s x fewer
+    messages, and >= the flops of classical BDCD."""
+    prob = Problem(m=1024, n=4096, f=0.1, b=b, H=256)
+    mach = Machine()
+    c = bdcd_cost(prob, mach, P)
+    cs = sstep_bdcd_cost(prob, mach, P, s)
+    np.testing.assert_allclose(cs["words"], c["words"], rtol=1e-9)
+    np.testing.assert_allclose(cs["msgs"], c["msgs"] / s, rtol=1e-9)
+    assert cs["flops"] >= c["flops"] - 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 1000), seed=st.integers(0, 5))
+def test_data_pipeline_deterministic(step, seed):
+    """Batch k is a pure function of (seed, k) — the fault-tolerance
+    contract (any worker can reconstruct any batch)."""
+    from repro.data.tokens import TokenPipeline
+    p1 = TokenPipeline(vocab_size=97, seq_len=12, global_batch=4, seed=seed)
+    p2 = TokenPipeline(vocab_size=97, seq_len=12, global_batch=4, seed=seed)
+    b1, b2 = p1.batch(step), p2.batch(step)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert int(b1["tokens"].max()) < 97
+    # shifted-by-one label structure
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
