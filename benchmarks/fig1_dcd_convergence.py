@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import enable_x64
 from repro.core import (KernelConfig, SVMConfig, coordinate_schedule,
                         dcd_ksvm, ksvm_duality_gap, sstep_dcd_ksvm)
 from repro.data.synthetic import classification_dataset
@@ -30,7 +31,7 @@ S_VALUES = (16, 256)
 def run(fast: bool = False):
     results = []
     datasets = dict(list(DATASETS.items())[:1]) if fast else DATASETS
-    with jax.enable_x64(True):
+    with enable_x64(True):
         for dname, (m, n) in datasets.items():
             A, y = classification_dataset(jax.random.key(0), m, n,
                                           dtype=jnp.float64)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import enable_x64
 from repro.core import (KernelConfig, KRRConfig, bdcd_krr, block_schedule,
                         krr_closed_form, relative_solution_error,
                         sstep_bdcd_krr)
@@ -33,7 +34,7 @@ def run(fast: bool = False):
         "bodyfat-like": ((252, 14), 64, (16, 256)),
     }
     results = []
-    with jax.enable_x64(True):
+    with enable_x64(True):
         for dname, ((m, n), b, s_values) in datasets.items():
             A, y = regression_dataset(jax.random.key(2), m, n,
                                       dtype=jnp.float64)

@@ -1,0 +1,100 @@
+"""Figure 5 (beyond paper): slab-free (GramOperator/KMV) vs materialized
+s-step BDCD rounds — modeled HBM bytes and measured round time.
+
+The paper removes the per-iteration NETWORK bottleneck with s-step slabs;
+on a single accelerator the analogous bottleneck is HBM traffic: the
+materialized path writes and re-reads the m x (s*b) slab every round
+(2*m*s*b words) while only ever consuming U^T alpha, the (sb x sb) cross
+block, and a scatter-add.  The slab-free path (EXPERIMENTS.md §Perf)
+streams the slab through VMEM tiles and never materializes it, so round
+HBM bytes drop by ~2*m*s*b words and m is no longer capped by slab
+storage (``perf_model.slab_fits_hbm``).
+
+Acceptance gate: modeled slab-free bytes must be STRICTLY below the
+materialized model for every s >= 8 config swept here.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KernelConfig, KRRConfig, block_schedule,
+                        sstep_bdcd_krr)
+from repro.core.kernels import gram_slab
+from repro.core.perf_model import (kmv_round_hbm_bytes, slab_fits_hbm,
+                                   slab_round_hbm_bytes)
+from repro.data.synthetic import regression_dataset
+
+from .common import emit, save_json, timeit
+
+S_VALUES = (8, 32, 256)
+B = 4                                    # block size; sb = s*B per round
+
+
+def modeled_traffic(fast: bool = False):
+    """HBM-byte model across s and m, up to m where the slab stops
+    fitting (16 GB budget) — the slab-free path keeps going."""
+    n = 128
+    ms = [4096, 65536, 1 << 20] if fast else [4096, 65536, 1 << 20, 1 << 24]
+    rows = []
+    for s in S_VALUES:
+        sb = s * B
+        for m in ms:
+            mat = slab_round_hbm_bytes(m, n, sb)
+            free = kmv_round_hbm_bytes(m, n, sb)
+            fits = slab_fits_hbm(m, sb)
+            rows.append({"s": s, "b": B, "m": m, "n": n,
+                         "slab_bytes": mat, "slabfree_bytes": free,
+                         "ratio": mat / free, "slab_fits_hbm": fits})
+            emit(f"fig5/model/s={s}/m={m}", 0.0,
+                 f"slab={mat:.3e}B;free={free:.3e}B;x{mat / free:.2f}"
+                 + ("" if fits else ";slab-does-not-fit"))
+    return rows
+
+
+def measured_rounds(fast: bool = False):
+    """Wall-time per outer round, materialized (gram_fn=gram_slab) vs
+    slab-free (GramOperator default), on host-sized problems."""
+    m, n = (1024, 64) if fast else (8192, 128)
+    A, y = regression_dataset(jax.random.key(0), m, n)
+    a0 = jnp.zeros(m)
+    cfg = KRRConfig(lam=1.0, kernel=KernelConfig("rbf", sigma=0.5))
+    rows = []
+    for s in S_VALUES:
+        rounds = 2
+        H = s * rounds
+        sched = block_schedule(jax.random.key(1), H, m, B)
+        t_mat = timeit(lambda s=s: sstep_bdcd_krr(
+            A, y, a0, sched, cfg, s=s, gram_fn=gram_slab)[0],
+            iters=1) / rounds
+        t_free = timeit(lambda s=s: sstep_bdcd_krr(
+            A, y, a0, sched, cfg, s=s)[0], iters=1) / rounds
+        rows.append({"s": s, "b": B, "m": m, "n": n,
+                     "t_round_slab_s": t_mat, "t_round_slabfree_s": t_free})
+        emit(f"fig5/measured/s={s}", t_free * 1e6,
+             f"slab={t_mat * 1e6:.0f}us;free={t_free * 1e6:.0f}us")
+    return rows
+
+
+def run(fast: bool = False):
+    results = {"modeled": modeled_traffic(fast),
+               "measured": measured_rounds(fast)}
+    bad = [r for r in results["modeled"]
+           if r["slabfree_bytes"] >= r["slab_bytes"]]
+    if bad:
+        raise AssertionError(
+            f"slab-free modeled bytes not strictly lower: {bad}")
+    print(f"fig5: slab-free strictly fewer modeled HBM bytes in "
+          f"{len(results['modeled'])}/{len(results['modeled'])} configs "
+          f"(min ratio x"
+          f"{min(r['ratio'] for r in results['modeled']):.2f})")
+    save_json("fig5_slabfree.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    run(fast=ap.parse_args().fast)

@@ -51,9 +51,10 @@ def measure_naive_sdpa(cfg, B, S, rules):
     def loss(q, k, v):
         return jnp.sum(fwd(q, k, v).astype(jnp.float32))
 
-    cf = jax.jit(fwd).lower(sds, sds, sds).compile().cost_analysis()
-    cg = jax.jit(jax.grad(loss, argnums=(0, 1, 2))).lower(
-        sds, sds, sds).compile().cost_analysis()
+    from repro.compat import cost_analysis
+    cf = cost_analysis(jax.jit(fwd).lower(sds, sds, sds).compile())
+    cg = cost_analysis(jax.jit(jax.grad(loss, argnums=(0, 1, 2))).lower(
+        sds, sds, sds).compile())
     return ({"flops": float(cf["flops"]),
              "bytes": float(cf.get("bytes accessed", 0.0))},
             {"flops": float(cg["flops"]),

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
   fig3   strong scaling, measured + Hockney-modeled         [paper Figs 3/5/6]
   fig4   running-time breakdown                             [paper Figs 4/7/8]
   table4 block-size ablation                                [paper Table 4]
+  fig5   slab-free vs materialized round (HBM bytes/time)   [EXPERIMENTS §Perf]
   roofline  assigned-arch roofline table from the dry-run   [EXPERIMENTS §Roofline]
 
 ``--fast`` shrinks datasets/iterations (used by CI / test_system).
@@ -22,8 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_dcd_convergence, fig2_bdcd_convergence,
-                            fig3_scaling, fig4_breakdown, roofline,
-                            table4_blocksize)
+                            fig3_scaling, fig4_breakdown, fig5_slabfree,
+                            roofline, table4_blocksize)
 
     def paper_dist_subprocess(fast=False):
         # needs its own process: it forces a 16-device host platform
@@ -49,6 +50,7 @@ def main() -> None:
         "fig3": fig3_scaling.run,
         "fig4": fig4_breakdown.run,
         "table4": table4_blocksize.run,
+        "fig5": fig5_slabfree.run,
         "paper_dist": paper_dist_subprocess,
         "roofline": roofline.run,
     }

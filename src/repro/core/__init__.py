@@ -1,4 +1,5 @@
-from .kernels import KernelConfig, gram_slab, gram_full, apply_epilogue
+from .kernels import (KernelConfig, GramOperator, gram_slab, gram_full,
+                      apply_epilogue, kernel_diag, kmv_slab_free)
 from .dcd import SVMConfig, dcd_ksvm, coordinate_schedule, L1, L2
 from .sstep_dcd import sstep_dcd_ksvm
 from .bdcd import KRRConfig, bdcd_krr, block_schedule

@@ -6,20 +6,24 @@ K-RR dual (paper eq. 2):  the optimality system is
 BDCD samples a block of ``b`` coordinates per iteration, extracts the b x b
 sub-system and solves it exactly:
 
-    U_k = K(A, V_k^T A)                     (m x b)   -- one all-reduce
-    G_k = (1/lambda) V_k^T U_k + m I        (b x b)
+    G_k = (1/lambda) K(A_k, A_k) + m I      (b x b)
     dalpha = G_k^{-1}(V_k^T y - m V_k^T alpha - (1/lambda) U_k^T alpha)
+
+The ``m x b`` slab ``U_k = K(A, V_k^T A)`` only enters through
+``U_k^T alpha`` and its sampled b x b block, so the default path is
+slab-free via ``GramOperator`` (DESIGN.md §2); ``gram_fn`` forces the
+legacy materialized-slab path (the parity oracle).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .kernels import KernelConfig, gram_slab
+from .kernels import GramOperator, KernelConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,19 +43,32 @@ def block_schedule(key: jax.Array, H: int, m: int, b: int) -> jnp.ndarray:
     return jax.vmap(one)(keys)
 
 
-@partial(jax.jit, static_argnames=("cfg", "record_every"))
+@partial(jax.jit, static_argnames=("cfg", "record_every", "gram_fn",
+                                   "op_factory"))
 def bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
              schedule: jnp.ndarray, cfg: KRRConfig,
-             record_every: int = 0) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+             record_every: int = 0,
+             gram_fn: Optional[Callable] = None,
+             op_factory: Optional[Callable] = None,
+             ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Run Algorithm 3 for H = schedule.shape[0] iterations."""
     m = A.shape[0]
     b = schedule.shape[1]
+    if gram_fn is not None and op_factory is not None:
+        raise ValueError("pass either gram_fn (materialized slab) or "
+                         "op_factory (slab-free operator), not both")
     inv_lam = 1.0 / cfg.lam
+    op = None if gram_fn else (op_factory or GramOperator)(A, cfg.kernel)
 
     def step(alpha, idx):                     # idx: (b,)
-        U = gram_slab(A, A[idx], cfg.kernel)               # (m, b)
-        G = inv_lam * U[idx, :] + m * jnp.eye(b, dtype=A.dtype)
-        rhs = y[idx] - m * alpha[idx] - inv_lam * (U.T @ alpha)
+        if gram_fn is not None:               # materialized m x b slab
+            U = gram_fn(A, A[idx], cfg.kernel)
+            Gblk = U[idx, :]
+            uTa = U.T @ alpha
+        else:                                 # slab-free operator path
+            Gblk, uTa = op.round_data(idx, alpha)
+        G = inv_lam * Gblk + m * jnp.eye(b, dtype=A.dtype)
+        rhs = y[idx] - m * alpha[idx] - inv_lam * uTa
         dalpha = jnp.linalg.solve(G, rhs)
         alpha = alpha.at[idx].add(dalpha)
         return alpha, (alpha if record_every else 0.0)

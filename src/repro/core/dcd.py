@@ -10,17 +10,22 @@ one coordinate at a time.  Each iteration needs one column ``u_k = K(Atil,
 a_{i_k})`` of the kernel matrix — on a distributed machine that is one
 all-reduce per iteration, which is exactly the bottleneck the s-step
 variant (``sstep_dcd.py``) removes.
+
+The column is only ever consumed through ``u_k^T alpha`` and ``u_k[i_k]``
+(= K(a_i, a_i)), so the default path reads both through a slab-free
+``GramOperator`` (DESIGN.md §2); ``gram_fn`` forces the legacy
+materialized-column path, kept as the parity oracle.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .kernels import KernelConfig, gram_slab
+from .kernels import GramOperator, KernelConfig
 
 L1 = "l1"
 L2 = "l2"
@@ -53,36 +58,48 @@ def coordinate_schedule(key: jax.Array, H: int, m: int) -> jnp.ndarray:
     return jax.random.randint(key, (H,), 0, m)
 
 
-def _dcd_update(alpha, i, u, nu, omega):
+def _dcd_theta(alpha_i, g, eta, nu):
     """One DCD coordinate update (paper lines 8-16). Returns theta."""
-    eta = u[i] + omega
-    g = u @ alpha - 1.0 + omega * alpha[i]
-    cand = jnp.clip(alpha[i] - g, 0.0, nu) - alpha[i]
+    cand = jnp.clip(alpha_i - g, 0.0, nu) - alpha_i
     gtilde = jnp.abs(cand)
-    theta = jnp.where(
+    return jnp.where(
         gtilde != 0.0,
-        jnp.clip(alpha[i] - g / eta, 0.0, nu) - alpha[i],
+        jnp.clip(alpha_i - g / eta, 0.0, nu) - alpha_i,
         0.0,
     )
-    return theta
 
 
-@partial(jax.jit, static_argnames=("cfg", "record_every"))
+@partial(jax.jit, static_argnames=("cfg", "record_every", "gram_fn",
+                                   "op_factory"))
 def dcd_ksvm(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
              schedule: jnp.ndarray, cfg: SVMConfig,
-             record_every: int = 0) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+             record_every: int = 0,
+             gram_fn: Optional[Callable] = None,
+             op_factory: Optional[Callable] = None,
+             ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Run Algorithm 1 for ``H = len(schedule)`` iterations.
 
     Returns ``(alpha_H, history)`` where ``history`` stacks ``alpha`` every
     ``record_every`` iterations (or ``None`` when 0).
     """
     Atil = y[:, None] * A                       # diag(y) @ A
+    if gram_fn is not None and op_factory is not None:
+        raise ValueError("pass either gram_fn (materialized slab) or "
+                         "op_factory (slab-free operator), not both")
     nu, omega = cfg.nu, cfg.omega
-    H = schedule.shape[0]
+    op = None if gram_fn else (op_factory or GramOperator)(Atil, cfg.kernel)
 
     def step(alpha, i):
-        u = gram_slab(Atil, Atil[i][None, :], cfg.kernel)[:, 0]
-        theta = _dcd_update(alpha, i, u, nu, omega)
+        idx = i[None]
+        if gram_fn is not None:                 # materialized m x 1 column
+            u = gram_fn(Atil, Atil[idx], cfg.kernel)[:, 0]
+            eta = u[i] + omega
+            g = u @ alpha - 1.0 + omega * alpha[i]
+        else:                                   # slab-free operator path
+            G, uTa = op.round_data(idx, alpha)  # (1, 1), (1,)
+            eta = G[0, 0] + omega
+            g = uTa[0] - 1.0 + omega * alpha[i]
+        theta = _dcd_theta(alpha[i], g, eta, nu)
         alpha = alpha.at[i].add(theta)
         return alpha, (alpha if record_every else 0.0)
 

@@ -11,36 +11,48 @@ Layouts
               each MPI rank "redundantly stores y and alpha" (Thm 1 proof).
 
 2D (beyond paper): additionally shards samples over the ``data`` axis.
-              The m x sb slab then lives row-sharded (each device reduces
-              only ``m/P_data x sb`` words over the model axis), cutting
-              the psum bandwidth term of Theorem 2 by P_data at the cost
-              of two extra small collectives per round (sampled-row gather
-              + cross-term gather).  See EXPERIMENTS.md §Perf.
+              The model-axis psum then reduces only ``m/P_data x sb``
+              words per device, cutting the psum bandwidth term of
+              Theorem 2 by P_data at the cost of two extra small
+              collectives per round (sampled-row gather + fused
+              cross-term gather).  See EXPERIMENTS.md §Perf.
 
 Classical vs s-step: the classical solvers communicate every iteration
 (H collectives); the s-step solvers communicate once per outer round
 (H/s collectives), which is the paper's entire contribution.
+
+Slab-free (EXPERIMENTS.md §Perf): the solvers consume the kernel slab
+through a ``GramOperator``, so these paths keep the psum-before-epilogue
+ordering required by nonlinear kernels (Thm 1/2 proofs) but drop the
+post-epilogue slab round-trip — the epilogue and the ``U^T alpha``
+contraction happen immediately on the psum result, the sampled cross
+block is sliced out of the SAME psum (no extra payload), and for the
+linear kernel the m x sb reduction disappears entirely (only the
+(sb, sb+1) contracted quantities are psummed).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .bdcd import KRRConfig
 from .dcd import SVMConfig
-from .kernels import RBF, KernelConfig, apply_epilogue
-from .sstep_bdcd import sstep_bdcd_krr
+from .kernels import LINEAR, RBF, KernelConfig, apply_epilogue
+from .sstep_bdcd import sstep_bdcd_inner, sstep_bdcd_krr
 from .sstep_dcd import sstep_dcd_ksvm
 
 
 def make_allreduce_gram(axis_name: str, row_sqnorms=None):
-    """Feature-partitioned gram slab: partial GEMM on local columns, then
-    one all-reduce (== the paper's MPI_Allreduce), then the nonlinear
-    epilogue applied redundantly on every rank (as in Thm 1/2 proofs).
+    """Feature-partitioned MATERIALIZED gram slab (legacy / parity oracle):
+    partial GEMM on local columns, one all-reduce (== the paper's
+    MPI_Allreduce), then the nonlinear epilogue applied redundantly on
+    every rank (as in Thm 1/2 proofs).  The slab-free operator below is
+    the default; this path survives as ``slab_free=False``.
 
     §Perf-paper optimization: for RBF, ``row_sqnorms`` (the psummed
     ||a_i||^2, computed ONCE per solve — they are loop-invariant) removes
@@ -67,68 +79,146 @@ def make_allreduce_gram(axis_name: str, row_sqnorms=None):
     return gram
 
 
+class AllreduceGramOperator:
+    """Slab-free ``GramOperator`` for the paper's 1D-column layout.
+
+    ``round_data`` issues exactly ONE psum per outer round (the paper's
+    ideal schedule), after which the slab exists only transiently on-rank:
+
+      linear:    the contraction commutes with the feature reduction, so
+                 only ``B (A^T x)`` and ``B B^T`` — (sb, sb+1) words — are
+                 psummed; the m x sb slab is NEVER formed, not even
+                 pre-epilogue.
+      poly/rbf:  the pre-epilogue m x sb dot block must be psummed first
+                 (Thm 1/2 ordering); the sampled sb x sb cross-dots are
+                 sliced straight out of that psum result (dots[idx] ==
+                 the sampled rows' gram, bit-identical), the epilogue
+                 runs redundantly on every rank, and ``U^T x`` is
+                 contracted immediately — no post-epilogue slab
+                 round-trip, no second collective, no extra payload.
+
+    ``row_sqnorms`` (psummed ||a_i||^2, loop-invariant) must be supplied
+    for RBF; sampled-column norms are read from it by index instead of a
+    separate psum.
+
+    Implements only ``round_data`` — the solvers' entire per-round
+    contract; the richer matvec/cross_block/diag surface lives on the
+    serial ``GramOperator``.
+    """
+
+    def __init__(self, axis_name: str, A_loc, cfg: KernelConfig,
+                 row_sqnorms=None):
+        if cfg.name == RBF and row_sqnorms is None:
+            raise ValueError("RBF AllreduceGramOperator needs the psummed "
+                             "row_sqnorms (loop-invariant, compute once)")
+        self.axis_name = axis_name
+        self.A_loc = A_loc
+        self.cfg = cfg
+        self.rs = row_sqnorms
+
+    def round_data(self, idx, x):
+        ax, cfg = self.axis_name, self.cfg
+        A_loc = self.A_loc
+        B_loc = A_loc[idx]
+        r = idx.shape[0]
+        if cfg.name == LINEAR:
+            cross_part = B_loc @ B_loc.T                  # (r, r) partial
+            mv_part = B_loc @ (A_loc.T @ x)               # (r,)  partial
+            packed = jax.lax.psum(
+                jnp.concatenate([cross_part, mv_part[:, None]], axis=1), ax)
+            return packed[:, :r], packed[:, r]
+        dots = jax.lax.psum(A_loc @ B_loc.T, ax)          # (m, r)
+        cross = dots[idx]                                 # == psummed B B^T
+        if cfg.name == RBF:
+            cs = self.rs[idx]
+            U = apply_epilogue(dots, cfg, self.rs, cs)    # transient
+            G = apply_epilogue(cross, cfg, cs, cs)
+        else:
+            U = apply_epilogue(dots, cfg)
+            G = apply_epilogue(cross, cfg)
+        return G, U.T @ x
+
+
+def _psummed_row_sqnorms(A_loc, cfg: KernelConfig, axis_name: str):
+    """Loop-invariant psummed ||a_i||^2 (RBF only; None otherwise)."""
+    if cfg.name != RBF:
+        return None
+    return jax.lax.psum(jnp.sum(A_loc * A_loc, axis=1), axis_name)
+
+
 # --------------------------------------------------------------------------
 # 1D (paper) layout solvers.  The serial solver bodies are reused verbatim:
-# only the gram function changes, which is precisely the paper's claim that
+# only the gram operator changes, which is precisely the paper's claim that
 # the s-step schedule is independent of the partitioning.
 # --------------------------------------------------------------------------
 
 def dist_sstep_dcd_ksvm(mesh: Mesh, A, y, alpha0, schedule,
-                        cfg: SVMConfig, s: int, axis_name: str = "model"):
+                        cfg: SVMConfig, s: int, axis_name: str = "model",
+                        slab_free: bool = True):
     """s-step DCD for K-SVM with A in 1D-column layout over ``axis_name``.
 
     A may be passed as a global array; it is sharded on features by the
-    in_spec.  Returns the replicated final alpha.
+    in_spec.  Returns the replicated final alpha.  ``slab_free=False``
+    selects the legacy materialized-slab all-reduce path (parity oracle).
     """
     spec_A = P(None, axis_name)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(spec_A, P(), P(), P()), out_specs=P(),
              check_vma=False)
     def run(A_loc, y_r, a0_r, sched_r):
         Atil_loc = y_r[:, None] * A_loc
-        rs = (jax.lax.psum(jnp.sum(Atil_loc * Atil_loc, axis=1), axis_name)
-              if cfg.kernel.name == RBF else None)
-        gram = make_allreduce_gram(axis_name, row_sqnorms=rs)
+        rs = _psummed_row_sqnorms(Atil_loc, cfg.kernel, axis_name)
+        if slab_free:
+            def op_factory(Atil, kcfg):
+                return AllreduceGramOperator(axis_name, Atil, kcfg, rs)
+            kw = {"op_factory": op_factory}
+        else:
+            kw = {"gram_fn": make_allreduce_gram(axis_name, row_sqnorms=rs)}
         # pass A_loc (sstep solver re-applies diag(y), idempotent w/ ones)
-        out, _ = sstep_dcd_ksvm(A_loc, y_r, a0_r, sched_r, cfg, s,
-                                gram_fn=gram)
+        out, _ = sstep_dcd_ksvm(A_loc, y_r, a0_r, sched_r, cfg, s, **kw)
         return out
 
     return run(A, y, alpha0, schedule)
 
 
 def dist_dcd_ksvm(mesh: Mesh, A, y, alpha0, schedule,
-                  cfg: SVMConfig, axis_name: str = "model"):
+                  cfg: SVMConfig, axis_name: str = "model",
+                  slab_free: bool = True):
     """Classical DCD baseline (communicates every iteration): implemented
     as s-step with s=1, which degenerates to Algorithm 1's schedule —
     one m-word psum per iteration."""
     return dist_sstep_dcd_ksvm(mesh, A, y, alpha0, schedule, cfg, s=1,
-                               axis_name=axis_name)
+                               axis_name=axis_name, slab_free=slab_free)
 
 
 def dist_sstep_bdcd_krr(mesh: Mesh, A, y, alpha0, schedule,
-                        cfg: KRRConfig, s: int, axis_name: str = "model"):
+                        cfg: KRRConfig, s: int, axis_name: str = "model",
+                        slab_free: bool = True):
     """s-step BDCD for K-RR, 1D-column layout."""
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(None, axis_name), P(), P(), P()), out_specs=P(),
              check_vma=False)
     def run(A_loc, y_r, a0_r, sched_r):
-        rs = (jax.lax.psum(jnp.sum(A_loc * A_loc, axis=1), axis_name)
-              if cfg.kernel.name == RBF else None)
-        gram = make_allreduce_gram(axis_name, row_sqnorms=rs)
-        out, _ = sstep_bdcd_krr(A_loc, y_r, a0_r, sched_r, cfg, s,
-                                gram_fn=gram)
+        rs = _psummed_row_sqnorms(A_loc, cfg.kernel, axis_name)
+        if slab_free:
+            def op_factory(A_, kcfg):
+                return AllreduceGramOperator(axis_name, A_, kcfg, rs)
+            kw = {"op_factory": op_factory}
+        else:
+            kw = {"gram_fn": make_allreduce_gram(axis_name, row_sqnorms=rs)}
+        out, _ = sstep_bdcd_krr(A_loc, y_r, a0_r, sched_r, cfg, s, **kw)
         return out
 
     return run(A, y, alpha0, schedule)
 
 
 def dist_bdcd_krr(mesh: Mesh, A, y, alpha0, schedule,
-                  cfg: KRRConfig, axis_name: str = "model"):
+                  cfg: KRRConfig, axis_name: str = "model",
+                  slab_free: bool = True):
     """Classical BDCD baseline — one (m x b)-word psum per iteration."""
     return dist_sstep_bdcd_krr(mesh, A, y, alpha0, schedule, cfg, s=1,
-                               axis_name=axis_name)
+                               axis_name=axis_name, slab_free=slab_free)
 
 
 # --------------------------------------------------------------------------
@@ -140,16 +230,22 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
                            data_axis: str = "data",
                            model_axis: str = "model"):
     """2D-partitioned s-step BDCD: A[m/Pd, n/Pm] per device, alpha sharded
-    over ``data``.
+    over ``data``.  Slab-free: the row-local slab tile is epilogued and
+    contracted in one shot; only contracted quantities cross the wires.
 
     Per outer round the collective schedule is:
       1. psum_data  : gather the s*b sampled rows (s*b x n/Pm words)
-      2. psum_model : reduce the row-local slab  (m/Pd x s*b words)
-      3. psum_data  : fuse {cross-term block Gblk, Q^T alpha, alpha/y at
-                      sampled idx} into ONE collective (s*b x (s*b+3))
+      2. psum_model : reduce the row-local dot block PLUS the s*b x s*b
+                      cross-dots riding the same collective
+                      ((m/Pd + s*b) x s*b words)
+      3. psum_data  : fuse {Q^T alpha, alpha at idx, y at idx} into ONE
+                      collective (s*b x 3 words — the sb x sb cross block
+                      no longer crosses the data axis at all: every rank
+                      rebuilds it redundantly from the replicated rows)
     vs. the 1D layout's single psum of (m x s*b).  For m >> s*b*Pd the
     bandwidth term drops by ~Pd while latency grows 3x — a win exactly in
-    the paper's bandwidth-bound regime (news20, Fig. 6-7).
+    the paper's bandwidth-bound regime (news20, Fig. 6-7).  RBF row norms
+    are loop-invariant and hoisted out of the round loop entirely.
     """
     m = A.shape[0]
     pd = mesh.shape[data_axis]
@@ -162,7 +258,7 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
     inv_lam = 1.0 / cfg.lam
     rounds_shape = (H // s, s, b)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
                        P()),
              out_specs=P(data_axis), check_vma=False)
@@ -170,6 +266,8 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
         my_d = jax.lax.axis_index(data_axis)
         row0 = my_d * m_loc
         rounds = sched.reshape(rounds_shape)
+        # loop-invariant RBF row norms for the locally-owned samples
+        rs_loc = _psummed_row_sqnorms(A_loc, cfg.kernel, model_axis)
 
         def outer(alpha_loc, idx):                    # idx: (s, b) global
             flat = idx.reshape(s * b)
@@ -178,51 +276,33 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
             onehot = (flat[:, None] == (row0 + jnp.arange(m_loc))[None, :])
             onehot = onehot.astype(A_loc.dtype)       # (sb, m_loc)
             B_loc = jax.lax.psum(onehot @ A_loc, data_axis)   # (sb, n_loc)
-            # (2) row-local slab, reduced over the model axis only.
-            dots = jax.lax.psum(A_loc @ B_loc.T, model_axis)  # (m_loc, sb)
+            # (2) row-local dot block + cross-dots, ONE model-axis psum.
+            packed = jax.lax.psum(jnp.concatenate(
+                [A_loc @ B_loc.T,                      # (m_loc, sb)
+                 B_loc @ B_loc.T], axis=0), model_axis)
+            dots, cross = packed[:m_loc], packed[m_loc:]
             if cfg.kernel.name == RBF:
-                rs = jax.lax.psum(jnp.sum(A_loc * A_loc, 1), model_axis)
-                cs = jax.lax.psum(jnp.sum(B_loc * B_loc, 1), model_axis)
-                Q_loc = apply_epilogue(dots, cfg.kernel, rs, cs)
+                cs = jnp.diagonal(cross)               # ||b_j||^2 for free
+                Q_loc = apply_epilogue(dots, cfg.kernel, rs_loc, cs)
+                Gblk = apply_epilogue(cross, cfg.kernel, cs, cs)
             else:
                 Q_loc = apply_epilogue(dots, cfg.kernel)
-            # (3) one fused data-axis psum for every cross term the inner
-            #     loop needs: Gblk (sb x sb), Q^T alpha (sb), alpha@idx,
-            #     y@idx (sb each).
+                Gblk = apply_epilogue(cross, cfg.kernel)
+            # (3) contract the slab tile IMMEDIATELY (it never leaves this
+            #     scope) and fuse every data-axis cross term into ONE psum.
             packed = jnp.concatenate([
-                onehot @ Q_loc,                        # (sb, sb) partial Gblk
                 (Q_loc.T @ alpha_loc)[:, None],        # (sb, 1)
                 (onehot @ alpha_loc)[:, None],         # (sb, 1)
                 (onehot @ y_loc)[:, None],             # (sb, 1)
             ], axis=1)
             packed = jax.lax.psum(packed, data_axis)
-            Gblk = packed[:, :s * b]
-            QTalpha = packed[:, s * b]
-            alpha_at = packed[:, s * b + 1].reshape(s, b)
-            y_at = packed[:, s * b + 2].reshape(s, b)
+            QTalpha = packed[:, 0]
+            alpha_at = packed[:, 1].reshape(s, b)
+            y_at = packed[:, 2].reshape(s, b)
 
-            collide = (flat[:, None] == flat[None, :]).astype(A_loc.dtype)
-            collide4 = collide.reshape(s, b, s, b)
-            Gblk4 = Gblk.reshape(s, b, s, b)
-            eye_b = jnp.eye(b, dtype=A_loc.dtype)
-
-            # redundant inner loop — identical math to sstep_bdcd_krr
-            def inner(j, dalpha):
-                tmask = (jnp.arange(s) < j).astype(A_loc.dtype)
-                prior = dalpha * tmask[:, None]
-                vv = jnp.einsum("tq,tqp->p", prior, collide4[:, :, j, :])
-                uv = jnp.einsum("tq,tqp->p", prior, Gblk4[:, :, j, :])
-                Uj_idx = jax.lax.dynamic_slice_in_dim(
-                    Gblk4[:, :, j, :].reshape(s * b, b), j * b, b, axis=0)
-                G = inv_lam * Uj_idx + m * eye_b
-                rhs = (y_at[j] - m * alpha_at[j] - m * vv
-                       - inv_lam * jax.lax.dynamic_slice_in_dim(
-                           QTalpha, j * b, b)
-                       - inv_lam * uv)
-                return dalpha.at[j].set(jnp.linalg.solve(G, rhs))
-
-            dalpha = jax.lax.fori_loop(0, s, inner,
-                                       jnp.zeros((s, b), A_loc.dtype))
+            # redundant inner loop — shared with the serial solver
+            dalpha = sstep_bdcd_inner(Gblk, QTalpha, alpha_at, y_at, flat,
+                                      m, inv_lam, s, b)
             # locally-owned scatter-add of the deferred update
             upd = onehot.T @ dalpha.reshape(s * b)      # (m_loc,)
             return alpha_loc + upd, 0.0

@@ -80,3 +80,103 @@ def gram_slab(A: jnp.ndarray, B: jnp.ndarray, cfg: KernelConfig) -> jnp.ndarray:
 def gram_full(A: jnp.ndarray, cfg: KernelConfig) -> jnp.ndarray:
     """Full m x m kernel matrix (only for oracles / closed-form solves)."""
     return gram_slab(A, A, cfg)
+
+
+def kernel_diag(B: jnp.ndarray, cfg: KernelConfig) -> jnp.ndarray:
+    """``diag K(B, B)`` without forming the block: (r,) for B: (r, n)."""
+    sq = jnp.sum(B * B, axis=1)
+    if cfg.name == LINEAR:
+        return sq
+    if cfg.name == POLYNOMIAL:
+        return (cfg.coef0 + sq) ** cfg.degree
+    return jnp.ones_like(sq)                     # RBF: K(x, x) = 1
+
+
+def kmv_slab_free(A: jnp.ndarray, B: jnp.ndarray, X: jnp.ndarray,
+                  cfg: KernelConfig, block: int = 2048) -> jnp.ndarray:
+    """``U^T X`` with ``U = K(A, B)`` — without an ``m x r`` slab (DESIGN.md
+    §2).
+
+    linear:    U^T X = B (A^T X) — pure algebra, the slab never exists.
+    poly/rbf:  blocked scan over m; each (block x r) kernel tile is built,
+               contracted against its X chunk, and discarded, so peak extra
+               memory is O(block * r) instead of O(m * r).  The Pallas KMV
+               kernel (``repro.kernels.kmv``) is the fused on-chip version
+               of exactly this loop.
+
+    X: (m,) or (m, c) right-hand vectors; returns (r,) / (r, c).
+    """
+    vec = X.ndim == 1
+    Xc = X[:, None] if vec else X
+    if cfg.name == LINEAR:
+        out = B @ (A.T @ Xc)                            # (r, c)
+    else:
+        m, n = A.shape
+        r = B.shape[0]
+        c = Xc.shape[1]
+        blk = min(block, m)
+        pad = (-m) % blk
+        Ap = jnp.pad(A, ((0, pad), (0, 0)))
+        Xp = jnp.pad(Xc, ((0, pad), (0, 0)))            # zero rows: no-op
+        cs = jnp.sum(B * B, axis=1) if cfg.name == RBF else None
+
+        def body(acc, chunk):
+            a_blk, x_blk = chunk
+            dots = a_blk @ B.T                          # (blk, r)
+            if cfg.name == RBF:
+                Kb = apply_epilogue(dots, cfg,
+                                    jnp.sum(a_blk * a_blk, axis=1), cs)
+            else:
+                Kb = apply_epilogue(dots, cfg)
+            return acc + Kb.T @ x_blk, None
+
+        out, _ = jax.lax.scan(
+            body, jnp.zeros((r, c), Xc.dtype),
+            (Ap.reshape(-1, blk, n), Xp.reshape(-1, blk, c)))
+    return out[:, 0] if vec else out
+
+
+@dataclasses.dataclass(frozen=True)
+class GramOperator:
+    """Implicit gram-slab operator: slab-free access to ``U = K(A, A[idx])``.
+
+    Every solver in ``repro.core`` consumes the ``m x (s*b)`` slab through
+    exactly three reductions, so exposing only those lets backends (fused
+    Pallas KMV, shard_map all-reduce) never materialize ``U`` in HBM:
+
+      ``matvec(idx, X)``    -> ``U^T X``            (s*b,) or (s*b, c)
+      ``cross_block(idx)``  -> ``U[idx, :]``        (s*b, s*b) sampled gram
+      ``diag(idx)``         -> ``diag K`` at idx    (s*b,)
+
+    ``round_data(idx, X)`` bundles (cross_block, matvec) — the per-round
+    needs of the s-step solvers — so distributed implementations can fuse
+    both into one collective (see ``core.distributed``).
+
+    ``matvec_impl(A, B, X, cfg)`` overrides the contraction backend, e.g.
+    with ``repro.kernels.kmv.kmv_pallas`` via ``kernels.ops``.
+    """
+
+    A: jnp.ndarray
+    cfg: KernelConfig
+    matvec_impl: Optional[callable] = None
+    block: int = 2048
+
+    def rows(self, idx: jnp.ndarray) -> jnp.ndarray:
+        return self.A[idx]
+
+    def matvec(self, idx: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+        B = self.A[idx]
+        if self.matvec_impl is not None:
+            return self.matvec_impl(self.A, B, X, self.cfg)
+        return kmv_slab_free(self.A, B, X, self.cfg, block=self.block)
+
+    def cross_block(self, idx: jnp.ndarray) -> jnp.ndarray:
+        B = self.A[idx]
+        return gram_slab(B, B, self.cfg)
+
+    def diag(self, idx: jnp.ndarray) -> jnp.ndarray:
+        return kernel_diag(self.A[idx], self.cfg)
+
+    def round_data(self, idx: jnp.ndarray, X: jnp.ndarray):
+        """(cross_block, matvec) for one s-step round."""
+        return self.cross_block(idx), self.matvec(idx, X)

@@ -1,11 +1,11 @@
 """s-Step Block Dual Coordinate Descent (paper Algorithm 4) for K-RR.
 
-One outer round computes the m x (s*b) kernel slab
+One outer round gathers everything ``s`` exact b x b block solves need:
 
-    Q_k = K(A, Omega_k^T A),   Omega_k = [V_{sk+1} ... V_{sk+s}]
+    Gblk    = K(A_Omega, A_Omega)  in R^{sb x sb}   (sampled cross block)
+    Q^T alpha in R^{sb}                             (one fused KMV)
 
-with a single gram GEMM + single all-reduce, then performs ``s`` exact b x b
-block solves locally.  The deferred alpha update is repaired with the
+with a single collective, then repairs the deferred alpha update with the
 correction sums of paper eq. (3):
 
     dalpha_{sk+j} = G^{-1}( V_j^T y - m V_j^T alpha_sk
@@ -13,8 +13,13 @@ correction sums of paper eq. (3):
                             - 1/lam U_j^T alpha_sk
                             - 1/lam sum_{t<j} U_j^T V_t dalpha_t )
 
-All correction data lives in the (sb x sb) matrix ``Q_k[idx_flat, :]`` and
-the index-collision mask — O((sb)^2) redundant flops, zero communication.
+All correction data lives in the (sb x sb) ``Gblk`` and the
+index-collision mask — O((sb)^2) redundant flops, zero communication.
+
+Slab-free by default (DESIGN.md §2): the ``m x sb`` slab ``Q_k`` is only
+consumed through ``Q^T alpha`` and ``Gblk``, both exposed by
+``GramOperator`` without materializing ``Q_k``.  ``gram_fn`` forces the
+legacy materialized-slab path (parity oracle / paper-faithful baseline).
 """
 from __future__ import annotations
 
@@ -25,59 +30,80 @@ import jax
 import jax.numpy as jnp
 
 from .bdcd import KRRConfig
-from .kernels import gram_slab
+from .kernels import GramOperator
 
 
-@partial(jax.jit, static_argnames=("cfg", "s", "record_rounds", "gram_fn"))
+def sstep_bdcd_inner(Gblk, QTalpha, alpha_at, y_at, flat, m, inv_lam,
+                     s, b):
+    """The redundant local phase shared by the serial and 2D-distributed
+    solvers: ``s`` sequential b x b solves with eq. (3) corrections.
+
+    Gblk: (sb, sb), QTalpha: (sb,), alpha_at/y_at: (s, b), flat: (sb,).
+    Returns dalpha: (s, b).
+    """
+    dtype = alpha_at.dtype
+    # collide[t, q, j, p] = 1 iff flat[t*b+q] == flat[j*b+p]
+    collide = (flat[:, None] == flat[None, :]).astype(dtype)
+    collide4 = collide.reshape(s, b, s, b)
+    Gblk4 = Gblk.reshape(s, b, s, b)                  # [t, q, j, p]
+    eye_b = jnp.eye(b, dtype=dtype)
+
+    def inner(j, dalpha):                             # dalpha: (s, b)
+        tmask = (jnp.arange(s) < j).astype(dtype)
+        prior = dalpha * tmask[:, None]               # zero for t >= j
+        # m * sum_t V_j^T V_t dalpha_t    -> (b,)
+        vv = jnp.einsum("tq,tqp->p", prior, collide4[:, :, j, :])
+        # 1/lam * sum_t U_j^T V_t dalpha_t = Q[idx_t, jb:jb+b]^T dalpha_t
+        uv = jnp.einsum("tq,tqp->p", prior, Gblk4[:, :, j, :])
+        Uj_idx = jax.lax.dynamic_slice_in_dim(
+            Gblk4[:, :, j, :].reshape(s * b, b), j * b, b, axis=0)
+        G = inv_lam * Uj_idx + m * eye_b
+        rhs = (y_at[j] - m * alpha_at[j] - m * vv
+               - inv_lam * jax.lax.dynamic_slice_in_dim(QTalpha, j * b, b)
+               - inv_lam * uv)
+        sol = jnp.linalg.solve(G, rhs)
+        return dalpha.at[j].set(sol)
+
+    return jax.lax.fori_loop(0, s, inner, jnp.zeros((s, b), dtype))
+
+
+@partial(jax.jit, static_argnames=("cfg", "s", "record_rounds", "gram_fn",
+                                   "op_factory"))
 def sstep_bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
                    schedule: jnp.ndarray, cfg: KRRConfig, s: int,
                    record_rounds: bool = False,
                    gram_fn: Optional[Callable] = None,
+                   op_factory: Optional[Callable] = None,
                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Run Algorithm 4.  ``schedule`` is the (H, b) block schedule from
     ``bdcd.block_schedule``; H % s == 0 required."""
     H, b = schedule.shape
     if H % s != 0:
         raise ValueError(f"H={H} must be divisible by s={s}")
-    gram = gram_fn or gram_slab
+    if gram_fn is not None and op_factory is not None:
+        raise ValueError("pass either gram_fn (materialized slab) or "
+                         "op_factory (slab-free operator), not both")
 
     m = A.shape[0]
     inv_lam = 1.0 / cfg.lam
     rounds = schedule.reshape(H // s, s, b)
-    eye_b = jnp.eye(b, dtype=A.dtype)
+    op = None if gram_fn else (op_factory or GramOperator)(A, cfg.kernel)
 
     def outer(alpha, idx):                     # idx: (s, b)
         flat = idx.reshape(s * b)
         # --- communication phase ----------------------------------------
-        Q = gram(A, A[flat], cfg.kernel)                  # (m, s*b)
-        Gblk = Q[flat, :]                                 # (s*b, s*b)
-        QTalpha = Q.T @ alpha                             # (s*b,)
-        y_at = y[idx]                                     # (s, b)
-        alpha_at = alpha[idx]                             # (s, b)
-        # collide[t, q, j, p] = 1 iff idx[t, q] == idx[j, p]
-        collide = (flat[:, None] == flat[None, :]).astype(alpha.dtype)
-        collide = collide.reshape(s, b, s, b)
-        Gblk4 = Gblk.reshape(s, b, s, b)                  # [t, q, j, p]
+        if gram_fn is not None:                # materialized m x sb slab
+            Q = gram_fn(A, A[flat], cfg.kernel)
+            Gblk = Q[flat, :]                  # (s*b, s*b)
+            QTalpha = Q.T @ alpha              # (s*b,)
+        else:                                  # slab-free operator path
+            Gblk, QTalpha = op.round_data(flat, alpha)
+        y_at = y[idx]                          # (s, b)
+        alpha_at = alpha[idx]                  # (s, b)
 
         # --- redundant local phase: s block solves -----------------------
-        def inner(j, dalpha):                             # dalpha: (s, b)
-            tmask = (jnp.arange(s) < j).astype(alpha.dtype)
-            prior = dalpha * tmask[:, None]               # zero for t >= j
-            # m * sum_t V_j^T V_t dalpha_t    -> (b,)
-            vv = jnp.einsum("tq,tqp->p", prior, collide[:, :, j, :])
-            # 1/lam * sum_t U_j^T V_t dalpha_t = Q[idx_t, jb:jb+b]^T dalpha_t
-            uv = jnp.einsum("tq,tqp->p", prior, Gblk4[:, :, j, :])
-            Uj_idx = jax.lax.dynamic_slice_in_dim(
-                Gblk4[:, :, j, :].reshape(s * b, b), j * b, b, axis=0)
-            G = inv_lam * Uj_idx + m * eye_b
-            rhs = (y_at[j] - m * alpha_at[j] - m * vv
-                   - inv_lam * jax.lax.dynamic_slice_in_dim(QTalpha, j * b, b)
-                   - inv_lam * uv)
-            sol = jnp.linalg.solve(G, rhs)
-            return dalpha.at[j].set(sol)
-
-        dalpha = jax.lax.fori_loop(
-            0, s, inner, jnp.zeros((s, b), alpha.dtype))
+        dalpha = sstep_bdcd_inner(Gblk, QTalpha, alpha_at, y_at, flat,
+                                  m, inv_lam, s, b)
         alpha = alpha.at[flat].add(dalpha.reshape(s * b))
         return alpha, (alpha if record_rounds else 0.0)
 

@@ -1,16 +1,23 @@
 """s-Step Dual Coordinate Descent (paper Algorithm 2) for kernel SVM.
 
 Mathematically equivalent to ``dcd.dcd_ksvm`` (same coordinate schedule =>
-same iterates in exact arithmetic), but computes the kernel slab for ``s``
+same iterates in exact arithmetic), but computes the kernel data for ``s``
 future coordinates up front:
 
-    U_k = K(Atil, Atil_k) in R^{m x s}       -- ONE gram GEMM + ONE all-reduce
-    G_k = V_k^T U_k + omega*I in R^{s x s}   -- all cross terms needed by the
-                                                inner recurrence
+    G_k = K(Atil_k, Atil_k) + omega*I in R^{s x s}  -- all cross terms the
+                                                       inner recurrence needs
+    U_k^T alpha in R^s                              -- one fused KMV
 
 then runs the ``s`` scalar sub-problem solves sequentially with gradient
 corrections (paper lines 14-23), touching only O(s^2) data and **no
 communication**.
+
+Slab-free by default (DESIGN.md §2): the ``m x s`` slab ``U_k`` is only
+ever consumed through ``U_k^T alpha`` and its sampled ``s x s`` cross
+block, so the solver reads both through a ``GramOperator`` and the slab
+never exists in HBM.  Pass ``gram_fn`` (e.g. ``core.kernels.gram_slab`` or
+the Pallas fused gram kernel) to force the legacy materialized-slab path —
+kept as the parity oracle and the paper-faithful baseline.
 """
 from __future__ import annotations
 
@@ -21,37 +28,46 @@ import jax
 import jax.numpy as jnp
 
 from .dcd import SVMConfig
-from .kernels import gram_slab
+from .kernels import GramOperator
 
 
-@partial(jax.jit, static_argnames=("cfg", "s", "record_rounds", "gram_fn"))
+@partial(jax.jit, static_argnames=("cfg", "s", "record_rounds", "gram_fn",
+                                   "op_factory"))
 def sstep_dcd_ksvm(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
                    schedule: jnp.ndarray, cfg: SVMConfig, s: int,
                    record_rounds: bool = False,
                    gram_fn: Optional[Callable] = None,
+                   op_factory: Optional[Callable] = None,
                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Run Algorithm 2.  ``schedule`` has length H and must satisfy H % s == 0.
 
-    ``gram_fn(Atil, rows, kernel_cfg)`` may be overridden (e.g. with the
-    Pallas fused gram kernel from ``repro.kernels.ops``); defaults to the
-    jnp reference.
+    ``op_factory(Atil, kernel_cfg)`` overrides the slab-free GramOperator
+    (e.g. with the Pallas KMV backend from ``repro.kernels.ops`` or the
+    all-reduce operator from ``core.distributed``).  ``gram_fn(Atil, rows,
+    kernel_cfg)`` instead selects the materialized-slab path.
     """
     H = schedule.shape[0]
     if H % s != 0:
         raise ValueError(f"H={H} must be divisible by s={s}")
-    gram = gram_fn or gram_slab
+    if gram_fn is not None and op_factory is not None:
+        raise ValueError("pass either gram_fn (materialized slab) or "
+                         "op_factory (slab-free operator), not both")
 
     Atil = y[:, None] * A
     nu, omega = cfg.nu, cfg.omega
     rounds = schedule.reshape(H // s, s)
+    op = None if gram_fn else (op_factory or GramOperator)(Atil, cfg.kernel)
 
     def outer(alpha, idx_s):
-        # --- communication phase: one slab, one (would-be) all-reduce ----
-        U = gram(Atil, Atil[idx_s], cfg.kernel)          # (m, s)
-        G0 = U[idx_s, :]                                 # V_k^T U_k, (s, s)
-        eta = jnp.diagonal(G0) + omega                   # (s,)
-        u_dot_alpha = U.T @ alpha                        # (s,)
-        alpha_at = alpha[idx_s]                          # (s,)
+        # --- communication phase: one fused round, one (would-be) psum ---
+        if gram_fn is not None:                  # materialized m x s slab
+            U = gram_fn(Atil, Atil[idx_s], cfg.kernel)
+            G0 = U[idx_s, :]                     # V_k^T U_k, (s, s)
+            u_dot_alpha = U.T @ alpha            # (s,)
+        else:                                    # slab-free operator path
+            G0, u_dot_alpha = op.round_data(idx_s, alpha)
+        eta = jnp.diagonal(G0) + omega           # (s,)
+        alpha_at = alpha[idx_s]                  # (s,)
         # same[t, j] = 1 iff i_{sk+t} == i_{sk+j} (for the omega & rho terms)
         same = (idx_s[:, None] == idx_s[None, :]).astype(alpha.dtype)
 

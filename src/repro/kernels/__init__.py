@@ -2,6 +2,8 @@
 
   gram.py            fused kernel-slab GEMM + {linear,poly,rbf} epilogue
                      (the paper's hot spot: K(A, Omega^T A))
+  kmv.py             fused gram·matvec K(A, B)^T X — the slab-free
+                     GramOperator backend (DESIGN.md §2)
   flash_attention.py flash attention fwd + bwd (FlashAttention-2 style)
   rmsnorm.py         fused RMSNorm
 

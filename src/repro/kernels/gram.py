@@ -29,6 +29,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.kernels import LINEAR, POLYNOMIAL, RBF, KernelConfig
 
+from repro.compat import CompilerParams as _CompilerParams
+
 
 def _gram_kernel(a_ref, b_ref, o_ref, acc_ref, rs_ref, cs_ref, *,
                  kernel_name: str, degree: int, coef0: float, sigma: float,
@@ -89,9 +91,10 @@ def gram_pallas(A: jnp.ndarray, B: jnp.ndarray, cfg: KernelConfig,
     m, n = A.shape
     r, n2 = B.shape
     assert n == n2, (A.shape, B.shape)
-    bm_ = min(bm, _round_up(m))
-    br_ = min(br, _round_up(r))
-    bk_ = min(bk, _round_up_lane(n))
+    sub = _sublane(A.dtype)
+    bm_ = _round_up(min(bm, _round_up(m, sub)), sub)
+    br_ = _round_up(min(br, _round_up(r, sub)), sub)
+    bk_ = min(bk, _round_up(n, 128))
     Ap = _pad_to(_pad_to(A, bm_, 0), bk_, 1)
     Bp = _pad_to(_pad_to(B, br_, 0), bk_, 1)
     M, N = Ap.shape
@@ -117,16 +120,18 @@ def gram_pallas(A: jnp.ndarray, B: jnp.ndarray, cfg: KernelConfig,
             pltpu.VMEM((bm_, 1), jnp.float32),
             pltpu.VMEM((br_, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(Ap, Bp)
     return out[:m, :r]
 
 
+def _sublane(dtype) -> int:
+    """Minimum TPU sublane multiple for ``dtype`` ((8, 128) f32 tiles,
+    (16, 128) bf16 — see pallas_guide Tiling Constraints)."""
+    return 16 if jnp.dtype(dtype) == jnp.bfloat16 else 8
+
+
 def _round_up(x, mult: int = 8):
-    return ((x + mult - 1) // mult) * mult
-
-
-def _round_up_lane(x, mult: int = 128):
     return ((x + mult - 1) // mult) * mult

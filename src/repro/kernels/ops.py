@@ -9,9 +9,10 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.kernels import KernelConfig
+from repro.core.kernels import GramOperator, KernelConfig
 from .gram import gram_pallas
-from .ref import gram_ref
+from .kmv import kmv_pallas
+from .ref import gram_ref, kmv_ref
 
 
 def on_tpu() -> bool:
@@ -22,6 +23,15 @@ def gram(A, B, cfg: KernelConfig, *, force_ref: bool = False, **tiles):
     if force_ref:
         return gram_ref(A, B, cfg)
     return gram_pallas(A, B, cfg, interpret=not on_tpu(), **tiles)
+
+
+def kmv(A, B, X, cfg: KernelConfig, *, force_ref: bool = False, **tiles):
+    """Fused ``K(A, B)^T X`` — the slab-free gram·matvec (DESIGN.md §2).
+    Pallas on TPU, interpret mode elsewhere; ``force_ref`` materializes
+    the slab (oracle / XLA-fusion baseline)."""
+    if force_ref:
+        return kmv_ref(A, B, X, cfg)
+    return kmv_pallas(A, B, X, cfg, interpret=not on_tpu(), **tiles)
 
 
 def sdpa_flash(q, k, v, causal=True, interpret=None, bq=256, bk=256):
@@ -40,9 +50,10 @@ def sdpa_flash(q, k, v, causal=True, interpret=None, bq=256, bk=256):
 
 
 def make_solver_gram_fn(use_pallas: bool = True):
-    """gram_fn for the core solvers (matches core.kernels.gram_slab's
-    signature).  On non-TPU backends interpret mode is slow, so solvers
-    default to the jnp path there unless explicitly forced."""
+    """gram_fn for the core solvers' MATERIALIZED-slab path (matches
+    core.kernels.gram_slab's signature).  On non-TPU backends interpret
+    mode is slow, so solvers default to the jnp path there unless
+    explicitly forced."""
     if not use_pallas:
         return None
 
@@ -50,6 +61,26 @@ def make_solver_gram_fn(use_pallas: bool = True):
         return gram(A, B, cfg).astype(A.dtype)
 
     return fn
+
+
+def make_solver_op_factory(use_pallas: bool = True, interpret=None,
+                           **tiles):
+    """op_factory for the core solvers: a slab-free ``GramOperator`` whose
+    matvec runs the fused Pallas KMV kernel — the m x sb slab never
+    touches HBM.  Returns None (= jnp slab-free default) when
+    ``use_pallas`` is False."""
+    if not use_pallas:
+        return None
+    interp = (not on_tpu()) if interpret is None else interpret
+
+    def matvec_impl(A, B, X, cfg):
+        return kmv_pallas(A, B, X, cfg, interpret=interp,
+                          **tiles).astype(X.dtype)
+
+    def factory(A, cfg):
+        return GramOperator(A, cfg, matvec_impl=matvec_impl)
+
+    return factory
 
 
 def rmsnorm(x, scale, eps: float = 1e-6, interpret=None):

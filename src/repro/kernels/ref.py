@@ -13,6 +13,14 @@ def gram_ref(A: jnp.ndarray, B: jnp.ndarray, cfg: KernelConfig,
                      cfg).astype(out_dtype)
 
 
+def kmv_ref(A: jnp.ndarray, B: jnp.ndarray, X: jnp.ndarray,
+            cfg: KernelConfig, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for kernels/kmv.py: ``K(A, B)^T X`` with the slab
+    materialized in f32 (the thing the fused kernel must never do)."""
+    U = gram_slab(A.astype(jnp.float32), B.astype(jnp.float32), cfg)
+    return (U.T @ X.astype(jnp.float32)).astype(out_dtype)
+
+
 def flash_attention_ref(q, k, v, causal=True, scale=None):
     """Oracle for kernels/flash_attention.py.  q/k/v: (BH, S|T, hd)."""
     hd = q.shape[-1]

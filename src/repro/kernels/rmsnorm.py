@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams as _CompilerParams
+
 
 def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps):
     x = x_ref[...].astype(jnp.float32)                  # (rows, D)
@@ -51,7 +53,7 @@ def rmsnorm_pallas(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
         ],
         out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(((rows + pad), D), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xr, scale)

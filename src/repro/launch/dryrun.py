@@ -73,7 +73,8 @@ def _compile_costs(cfg, shape_name, rules, microbatches, unroll):
     step, args = build_step(cfg, shape_name, rules, microbatches, unroll)
     lowered = step.lower(*args)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis
+    ca = cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     return {

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models import ModelConfig, loss_fn, tree_shardings
 from repro.models.sharding import MeshRules
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -118,7 +119,7 @@ def make_defer_train_step(cfg: ModelConfig, acfg: AdamWConfig,
 
     # partial-manual shard_map: (pod, data) axes are MANUAL (we control the
     # psum cadence), the model axis stays AUTO (GSPMD does TP inside).
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(), P(), batch_spec), out_specs=(P(), P(), P()),
              axis_names=frozenset(dp_axes), check_vma=False)
     def step(params, opt_state, batch):

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import enable_x64
 from repro.core import (KernelConfig, KRRConfig, SVMConfig, bdcd_krr,
                         block_schedule, coordinate_schedule, dcd_ksvm,
                         krr_closed_form, ksvm_duality_gap,
@@ -55,7 +56,7 @@ def test_sstep_bdcd_matches_bdcd(kernel, b, s):
 def test_equivalence_fp64_machine_precision():
     """Paper: 'compute the same solution as the existing methods in exact
     arithmetic' — at fp64 the deviation should be ~1e-12."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         key = jax.random.key(4)
         A, y = classification_dataset(key, m=64, n=16, dtype=jnp.float64)
         cfg = SVMConfig(C=1.0, loss="l1", kernel=KernelConfig("rbf"))

@@ -36,15 +36,16 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 
-mesh = jax.make_mesh((4,), ("x",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh_auto
+mesh = make_mesh_auto((4,), ("x",))
 A = jax.ShapeDtypeStruct((1024, 1024), jnp.float32,
                          sharding=NamedSharding(mesh, P("x", None)))
 B = jax.ShapeDtypeStruct((1024, 1024), jnp.float32,
                          sharding=NamedSharding(mesh, P(None, None)))
 c = jax.jit(lambda a, b: a @ b).lower(A, B).compile()
 full = 2 * 1024**3
-got = c.cost_analysis()["flops"]
+from repro.compat import cost_analysis
+got = cost_analysis(c)["flops"]
 assert abs(got - full / 4) / (full / 4) < 0.05, (got, full)  # per-device
 
 def f(x):
@@ -53,7 +54,7 @@ def f(x):
     return jax.lax.scan(body, x, None, length=8)[0]
 c2 = jax.jit(f).lower(jnp.ones((256, 256))).compile()
 one = 2 * 256**3
-got2 = c2.cost_analysis()["flops"]
+got2 = cost_analysis(c2)["flops"]
 assert abs(got2 - one) / one < 0.05, (got2, one)             # body once
 
 def g(x):                                                    # unrolled
@@ -61,7 +62,7 @@ def g(x):                                                    # unrolled
         x = x @ x
     return x
 c3 = jax.jit(g).lower(jnp.ones((256, 256))).compile()
-got3 = c3.cost_analysis()["flops"]
+got3 = cost_analysis(c3)["flops"]
 assert abs(got3 - 8 * one) / (8 * one) < 0.05, (got3,)      # full total
 print("SEMANTICS-OK")
 """
@@ -87,8 +88,8 @@ from repro.launch.dryrun import extrapolated_costs, _compile_costs, _probe_cfg
 
 cfg = dataclasses.replace(get_config("qwen3_1p7b", reduced=True),
                           n_layers=6)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh_auto
+mesh = make_mesh_auto((2, 2), ("data", "model"))
 rules = MeshRules(mesh)
 
 # patch SHAPES with a tiny train shape for the probe

@@ -6,7 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                                    # property sweep is optional on bare envs
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.kernels import KernelConfig
 from repro.kernels.gram import gram_pallas
@@ -52,13 +57,14 @@ def test_gram_block_shape_invariance(blocks):
            dtype=jnp.float32, bm=bm, br=br, bk=bk)
 
 
-@settings(max_examples=12, deadline=None)
-@given(m=st.integers(1, 70), r=st.integers(1, 40), n=st.integers(1, 150),
-       kidx=st.integers(0, 2))
-def test_gram_property_shapes(m, r, n, kidx):
-    """Any (m, r, n) — padding must never contaminate real outputs."""
-    _check(m, r, n, cfg=KERNELS[kidx], dtype=jnp.float32,
-           bm=16, br=16, bk=128)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(m=st.integers(1, 70), r=st.integers(1, 40), n=st.integers(1, 150),
+           kidx=st.integers(0, 2))
+    def test_gram_property_shapes(m, r, n, kidx):
+        """Any (m, r, n) — padding must never contaminate real outputs."""
+        _check(m, r, n, cfg=KERNELS[kidx], dtype=jnp.float32,
+               bm=16, br=16, bk=128)
 
 
 def test_gram_rbf_diagonal_is_one():

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                                    # property sweep is optional on bare envs
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.models.layers import rmsnorm
@@ -24,13 +29,14 @@ def test_rmsnorm_matches_oracle(shape, dtype):
                                rtol=tol, atol=tol)
 
 
-@settings(max_examples=8, deadline=None)
-@given(rows=st.integers(1, 40), d=st.sampled_from([128, 256, 384]),
-       seed=st.integers(0, 5))
-def test_rmsnorm_property(rows, d, seed):
-    x = jax.random.normal(jax.random.key(seed), (rows, d))
-    scale = jnp.ones((d,))
-    got = rmsnorm_pallas(x, scale, interpret=True, block_rows=16)
-    # unit-RMS invariant
-    rms = jnp.sqrt(jnp.mean(got * got, axis=-1))
-    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(rows=st.integers(1, 40), d=st.sampled_from([128, 256, 384]),
+           seed=st.integers(0, 5))
+    def test_rmsnorm_property(rows, d, seed):
+        x = jax.random.normal(jax.random.key(seed), (rows, d))
+        scale = jnp.ones((d,))
+        got = rmsnorm_pallas(x, scale, interpret=True, block_rows=16)
+        # unit-RMS invariant
+        rms = jnp.sqrt(jnp.mean(got * got, axis=-1))
+        np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
