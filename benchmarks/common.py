@@ -43,3 +43,15 @@ def save_json(name: str, obj):
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def fit_stats(result):
+    """repro.api FitResult bookkeeping (wall-clock + Hockney comm model)
+    surfaced into the fig1/fig2 JSON records, so the perf trajectory
+    captures solver-loop overhead too — not just kernel bytes."""
+    return {"wall_time_s": result.wall_time_s,
+            "rounds_run": result.rounds_run,
+            "iters_run": result.iters_run,
+            "modeled_comm_words": result.comm["words"],
+            "modeled_comm_msgs": result.comm["msgs"],
+            "modeled_comm_time_s": result.comm["time"]}

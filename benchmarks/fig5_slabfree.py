@@ -20,9 +20,8 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import (KernelConfig, KRRConfig, block_schedule,
-                        sstep_bdcd_krr)
-from repro.core.kernels import gram_slab
+from repro.api import KernelRidge, SolverOptions
+from repro.core import KernelConfig
 from repro.core.perf_model import (kmv_round_hbm_bytes, slab_fits_hbm,
                                    slab_round_hbm_bytes)
 from repro.data.synthetic import regression_dataset
@@ -55,22 +54,25 @@ def modeled_traffic(fast: bool = False):
 
 
 def measured_rounds(fast: bool = False):
-    """Wall-time per outer round, materialized (gram_fn=gram_slab) vs
-    slab-free (GramOperator default), on host-sized problems."""
+    """Wall-time per outer round, materialized (slab_free=False — the
+    gram_slab parity-oracle path) vs slab-free (GramOperator default),
+    both through the ``repro.api`` facade, on host-sized problems."""
     m, n = (1024, 64) if fast else (8192, 128)
     A, y = regression_dataset(jax.random.key(0), m, n)
-    a0 = jnp.zeros(m)
-    cfg = KRRConfig(lam=1.0, kernel=KernelConfig("rbf", sigma=0.5))
+    kern = KernelConfig("rbf", sigma=0.5)
     rows = []
     for s in S_VALUES:
         rounds = 2
         H = s * rounds
-        sched = block_schedule(jax.random.key(1), H, m, B)
-        t_mat = timeit(lambda s=s: sstep_bdcd_krr(
-            A, y, a0, sched, cfg, s=s, gram_fn=gram_slab)[0],
-            iters=1) / rounds
-        t_free = timeit(lambda s=s: sstep_bdcd_krr(
-            A, y, a0, sched, cfg, s=s)[0], iters=1) / rounds
+
+        def fit_alpha(s=s, slab_free=True):
+            opts = SolverOptions(method="sstep", s=s, b=B, max_iters=H,
+                                 seed=1, slab_free=slab_free)
+            return KernelRidge(lam=1.0, kernel=kern,
+                               options=opts).fit(A, y).alpha
+
+        t_mat = timeit(lambda s=s: fit_alpha(s, False), iters=1) / rounds
+        t_free = timeit(lambda s=s: fit_alpha(s, True), iters=1) / rounds
         rows.append({"s": s, "b": B, "m": m, "n": n,
                      "t_round_slab_s": t_mat, "t_round_slabfree_s": t_free})
         emit(f"fig5/measured/s={s}", t_free * 1e6,

@@ -2,7 +2,10 @@
 Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
 
   fig1   DCD vs s-step DCD convergence (duality gap)        [paper Fig 1]
+         (each s-step record carries a ``fit`` block: repro.api FitResult
+          wall-clock + Hockney-modeled comm words/msgs/time)
   fig2   BDCD vs s-step BDCD convergence (rel. error)       [paper Fig 2]
+         (``fit`` blocks as in fig1)
   fig3   strong scaling, measured + Hockney-modeled         [paper Figs 3/5/6]
   fig4   running-time breakdown                             [paper Figs 4/7/8]
   table4 block-size ablation                                [paper Table 4]

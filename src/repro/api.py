@@ -1,0 +1,352 @@
+"""Unified solver facade: estimators over the paper's algorithm family.
+
+The paper's value proposition is *same solution, tunable communication*:
+classical vs s-step, block size b, and partition layout are tuning knobs
+over ONE algorithm family.  This module is the single public seam that
+reflects that (DESIGN.md §8):
+
+    from repro.api import KernelSVM, KernelRidge, SolverOptions
+
+    clf = KernelSVM(C=1.0, kernel="rbf",
+                    options=SolverOptions(method="sstep", s=32,
+                                          tol=1e-6, max_iters=2048))
+    result = clf.fit(A, y)          # FitResult: alpha, history, comm model
+    labels = clf.predict(A_test)
+
+Dispatch covers {classical, sstep} x {serial, 1d, 2d}: the serial path
+drives the shared round protocol (``core/loop.run_rounds``) directly —
+one ``lax.scan`` when no tolerance/recording is requested (bit-compatible
+with the legacy entrypoints), one ``lax.while_loop`` with a metric check
+every ``check_every`` rounds otherwise.  The 1d/2d paths reuse the
+``shard_map`` solvers in ``core/distributed``; their tolerance stopping
+runs the same schedule in ``check_every``-round chunks with the metric
+evaluated between chunks (round boundaries are identical because chunks
+are whole multiples of s).
+
+Convergence metrics: K-SVM stops on the duality gap
+(``objectives.ksvm_duality_gap``); K-RR stops on the relative residual of
+the optimality system (``objectives.krr_rel_residual``) — the paper's
+rel-error needs the closed-form alpha*, which costs an m x m
+factorization the facade refuses to hide inside ``fit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import make_mesh_auto
+from repro.core import (KernelConfig, KRRConfig, SVMConfig, NO_TOL,
+                        bdcd_krr, block_schedule, coordinate_schedule,
+                        dcd_ksvm, gram_slab, krr_predict, krr_rel_residual,
+                        ksvm_duality_gap, ksvm_predict,
+                        make_bdcd_round_fn, make_dcd_round_fn,
+                        make_sstep_bdcd_round_fn, make_sstep_dcd_round_fn,
+                        pad_rounds, run_rounds, sstep_bdcd_krr,
+                        sstep_dcd_ksvm)
+from repro.core import distributed
+from repro.core.perf_model import modeled_fit_cost
+
+METHODS = ("classical", "sstep")
+LAYOUTS = ("serial", "1d", "2d")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverOptions:
+    """How to run the solve — every knob of the paper's algorithm family.
+
+    method:      "classical" (communicate every iteration) or "sstep"
+                 (one communication round per s iterations, same iterates).
+    s:           s-step depth (ignored for method="classical").
+    b:           block size (K-RR only; K-SVM is scalar-coordinate).
+    layout:      "serial", "1d" (paper's feature-partitioned shard_map
+                 layout), or "2d" (samples x features, beyond paper).
+    mesh:        jax Mesh for 1d/2d; auto-built over the host's devices
+                 when None ("model"-major for 1d, "data"-major for 2d).
+    slab_free:   consume kernel slabs through the GramOperator (default);
+                 False forces the materialized-slab parity-oracle path
+                 (serial and 1d only).
+    tol:         stop once the convergence metric (duality gap for K-SVM,
+                 relative residual for K-RR) falls to tol; 0 disables
+                 early stopping.
+    check_every: metric cadence, in outer rounds.
+    max_iters:   total inner-iteration budget H.  H % s != 0 is fine —
+                 the final short round is handled by pad-and-mask.
+    record:      keep the metric history even when tol == 0.
+    seed:        PRNG seed for the coordinate/block schedule.
+    """
+
+    method: str = "sstep"
+    s: int = 16
+    b: int = 1
+    layout: str = "serial"
+    mesh: Optional[object] = None
+    slab_free: bool = True
+    tol: float = 0.0
+    check_every: int = 8
+    max_iters: int = 1024
+    record: bool = False
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(
+                f"method must be one of {METHODS}, got {self.method!r}")
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"layout must be one of {LAYOUTS}, got {self.layout!r}")
+        for name in ("s", "b", "max_iters", "check_every"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{name} must be a positive int, got {v!r}")
+        if not self.tol >= 0.0:
+            raise ValueError(f"tol must be >= 0, got {self.tol!r}")
+        if not self.slab_free and self.layout == "2d":
+            raise ValueError("the 2d layout is slab-free by construction; "
+                             "slab_free=False is only meaningful for the "
+                             "serial and 1d layouts")
+
+    @property
+    def s_eff(self) -> int:
+        """Inner iterations per communication round (1 for classical)."""
+        return self.s if self.method == "sstep" else 1
+
+
+@dataclasses.dataclass
+class FitResult:
+    """Everything ``fit`` observed: the solution, the convergence
+    trajectory, and the modeled communication cost of the run."""
+
+    alpha: jnp.ndarray
+    schedule: jnp.ndarray          # the iterations actually executed —
+                                   # truncated to iters_run on early stop,
+                                   # so replaying it through a legacy
+                                   # entrypoint reproduces alpha
+    history: Optional[np.ndarray]  # metric at each check point (or None)
+    metric: str                    # "duality_gap" | "rel_residual"
+    converged: bool
+    rounds_run: int
+    iters_run: int
+    wall_time_s: float
+    comm: dict                     # Hockney model: flops/words/msgs/time
+    options: SolverOptions
+
+
+def _as_kernel(kernel: Union[str, KernelConfig, None]) -> KernelConfig:
+    if kernel is None:
+        return KernelConfig()
+    if isinstance(kernel, str):
+        return KernelConfig(kernel)
+    return kernel
+
+
+def _resolve_mesh(opts: SolverOptions):
+    """User mesh (validated for the layout's axis names) or an auto mesh
+    over every visible device."""
+    ndev = len(jax.devices())
+    if opts.mesh is None:
+        shape = (1, ndev) if opts.layout == "1d" else (ndev, 1)
+        return make_mesh_auto(shape, ("data", "model"))
+    need = ("model",) if opts.layout == "1d" else ("data", "model")
+    missing = [ax for ax in need if ax not in opts.mesh.axis_names]
+    if missing:
+        raise ValueError(f"mesh lacks axes {missing} required by the "
+                         f"{opts.layout!r} layout (has "
+                         f"{opts.mesh.axis_names})")
+    return opts.mesh
+
+
+@partial(jax.jit, static_argnames=("cfg", "s", "check_every", "slab_free"))
+def _ksvm_serial_tol(A, y, a0, schedule, tol, *, cfg: SVMConfig, s: int,
+                     check_every: int, slab_free: bool):
+    gram = None if slab_free else gram_slab
+    if s == 1:
+        rf, xs = make_dcd_round_fn(A, y, cfg, gram_fn=gram), schedule
+    else:
+        rf = make_sstep_dcd_round_fn(A, y, cfg, s, gram_fn=gram)
+        xs = pad_rounds(schedule, s)
+    return run_rounds(rf, a0, xs, tol=tol, check_every=check_every,
+                      metric_fn=lambda a: ksvm_duality_gap(A, y, a, cfg))
+
+
+@partial(jax.jit, static_argnames=("cfg", "s", "check_every", "slab_free"))
+def _krr_serial_tol(A, y, a0, schedule, tol, *, cfg: KRRConfig, s: int,
+                    check_every: int, slab_free: bool):
+    gram = None if slab_free else gram_slab
+    if s == 1:
+        rf, xs = make_bdcd_round_fn(A, y, cfg, gram_fn=gram), schedule
+    else:
+        rf = make_sstep_bdcd_round_fn(A, y, cfg, s, gram_fn=gram)
+        xs = pad_rounds(schedule, s)
+    return run_rounds(rf, a0, xs, tol=tol, check_every=check_every,
+                      metric_fn=lambda a: krr_rel_residual(A, y, a, cfg))
+
+
+def _serial_fast(problem, A, y, a0, schedule, cfg, s, slab_free):
+    """tol == 0, no recording: the legacy jitted entrypoints verbatim."""
+    gram = None if slab_free else gram_slab
+    if problem == "ksvm":
+        if s == 1:
+            return dcd_ksvm(A, y, a0, schedule, cfg, gram_fn=gram)[0]
+        return sstep_dcd_ksvm(A, y, a0, schedule, cfg, s, gram_fn=gram)[0]
+    if s == 1:
+        return bdcd_krr(A, y, a0, schedule, cfg, gram_fn=gram)[0]
+    return sstep_bdcd_krr(A, y, a0, schedule, cfg, s, gram_fn=gram)[0]
+
+
+@partial(jax.jit, static_argnames=("problem", "layout", "mesh", "cfg",
+                                   "s", "slab_free"))
+def _dist_chunk(A, y, a0, schedule, *, problem, layout, mesh, cfg, s,
+                slab_free):
+    """Jit-cached wrapper around the shard_map solvers: the chunked
+    tolerance loop re-enters here once per chunk, and every chunk of the
+    same length hits the cache instead of re-tracing the shard_map body
+    (at most two shapes compile per fit: the chunk and the ragged tail)."""
+    return _dist_call(problem, layout, mesh, A, y, a0, schedule, cfg, s,
+                      slab_free)
+
+
+def _dist_call(problem, layout, mesh, A, y, a0, schedule, cfg, s,
+               slab_free):
+    if problem == "ksvm":
+        if layout == "1d":
+            return distributed.dist_sstep_dcd_ksvm(
+                mesh, A, y, a0, schedule, cfg, s=s, slab_free=slab_free)
+        return distributed.dist_sstep_dcd_ksvm_2d(
+            mesh, A, y, a0, schedule, cfg, s=s)
+    if layout == "1d":
+        return distributed.dist_sstep_bdcd_krr(
+            mesh, A, y, a0, schedule, cfg, s=s, slab_free=slab_free)
+    return distributed.dist_sstep_bdcd_krr_2d(
+        mesh, A, y, a0, schedule, cfg, s=s)
+
+
+def _fit(problem: str, A, y, cfg, opts: SolverOptions) -> FitResult:
+    m, n = A.shape
+    H = opts.max_iters
+    s = opts.s_eff
+    b = opts.b if problem == "krr" else 1
+    key = jax.random.key(opts.seed)
+    if problem == "ksvm":
+        schedule = coordinate_schedule(key, H, m)
+        metric_name = "duality_gap"
+        metric_host = lambda a: float(ksvm_duality_gap(A, y, a, cfg))
+    else:
+        schedule = block_schedule(key, H, m, b)
+        metric_name = "rel_residual"
+        metric_host = lambda a: float(krr_rel_residual(A, y, a, cfg))
+    a0 = jnp.zeros(m, A.dtype)
+    want_metric = opts.tol > 0.0 or opts.record
+    tol = opts.tol if opts.tol > 0.0 else NO_TOL
+
+    t0 = time.perf_counter()
+    history = None
+    converged = False
+    if opts.layout == "serial":
+        P = 1
+        if not want_metric:
+            alpha = _serial_fast(problem, A, y, a0, schedule, cfg, s,
+                                 opts.slab_free)
+            rounds_run = -(-H // s)
+        else:
+            solve = (_ksvm_serial_tol if problem == "ksvm"
+                     else _krr_serial_tol)
+            res = solve(A, y, a0, schedule, tol, cfg=cfg, s=s,
+                        check_every=opts.check_every,
+                        slab_free=opts.slab_free)
+            alpha = res.state
+            rounds_run = int(res.rounds_run)
+            converged = bool(res.converged)
+            history = np.asarray(res.metric_hist)[:int(res.checks_run)]
+        iters_run = min(rounds_run * s, H)
+    else:
+        mesh = _resolve_mesh(opts)
+        P = (mesh.shape["model"] if opts.layout == "1d"
+             else mesh.shape["data"] * mesh.shape["model"])
+        alpha = a0
+        dist_kw = dict(problem=problem, layout=opts.layout, mesh=mesh,
+                       cfg=cfg, s=s, slab_free=opts.slab_free)
+        if not want_metric:
+            alpha = _dist_chunk(A, y, alpha, schedule, **dist_kw)
+            rounds_run, iters_run = -(-H // s), H
+        else:
+            # chunked early stopping: whole multiples of s per chunk keep
+            # the round decomposition identical to the unchunked run.
+            chunk = opts.check_every * s
+            pos, rounds_run, hist = 0, 0, []
+            while pos < H:
+                sched_c = schedule[pos:pos + chunk]
+                alpha = _dist_chunk(A, y, alpha, sched_c, **dist_kw)
+                pos += sched_c.shape[0]
+                rounds_run += -(-sched_c.shape[0] // s)
+                val = metric_host(alpha)
+                hist.append(val)
+                if opts.tol > 0.0 and val <= opts.tol:
+                    converged = True
+                    break
+            iters_run = pos
+            history = np.asarray(hist)
+    jax.block_until_ready(alpha)
+    wall = time.perf_counter() - t0
+
+    comm = modeled_fit_cost(m, n, cfg.kernel.name, b=b, s=s,
+                            iters=iters_run, P=P)
+    return FitResult(alpha=alpha, schedule=schedule[:iters_run],
+                     history=history, metric=metric_name,
+                     converged=converged,
+                     rounds_run=rounds_run, iters_run=iters_run,
+                     wall_time_s=wall, comm=comm, options=opts)
+
+
+class KernelSVM:
+    """Kernel SVM solved by (s-step) Dual Coordinate Descent.
+
+    Estimator facade over ``core.dcd`` / ``core.sstep_dcd`` and their
+    shard_map layouts; see module docstring and ``SolverOptions``.
+    """
+
+    def __init__(self, C: float = 1.0, loss: str = "l1",
+                 kernel: Union[str, KernelConfig, None] = None,
+                 options: Optional[SolverOptions] = None):
+        self.cfg = SVMConfig(C=C, loss=loss, kernel=_as_kernel(kernel))
+        self.options = options or SolverOptions()
+
+    def fit(self, A, y) -> FitResult:
+        result = _fit("ksvm", A, y, self.cfg, self.options)
+        self.A_, self.y_, self.alpha_ = A, y, result.alpha
+        self.result_ = result
+        return result
+
+    def decision_function(self, A_test):
+        return ksvm_predict(self.A_, self.y_, self.alpha_, A_test, self.cfg)
+
+    def predict(self, A_test):
+        return jnp.sign(self.decision_function(A_test))
+
+
+class KernelRidge:
+    """Kernel ridge regression solved by (s-step) Block Dual Coordinate
+    Descent.  Estimator facade over ``core.bdcd`` / ``core.sstep_bdcd``
+    and their shard_map layouts; see module docstring and
+    ``SolverOptions``.
+    """
+
+    def __init__(self, lam: float = 1.0,
+                 kernel: Union[str, KernelConfig, None] = None,
+                 options: Optional[SolverOptions] = None):
+        self.cfg = KRRConfig(lam=lam, kernel=_as_kernel(kernel))
+        self.options = options or SolverOptions()
+
+    def fit(self, A, y) -> FitResult:
+        result = _fit("krr", A, y, self.cfg, self.options)
+        self.A_, self.alpha_ = A, result.alpha
+        self.result_ = result
+        return result
+
+    def predict(self, A_test):
+        return krr_predict(self.A_, self.alpha_, A_test, self.cfg)

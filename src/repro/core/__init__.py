@@ -1,10 +1,12 @@
 from .kernels import (KernelConfig, GramOperator, gram_slab, gram_full,
                       apply_epilogue, kernel_diag, kmv_slab_free)
-from .dcd import SVMConfig, dcd_ksvm, coordinate_schedule, L1, L2
-from .sstep_dcd import sstep_dcd_ksvm
-from .bdcd import KRRConfig, bdcd_krr, block_schedule
-from .sstep_bdcd import sstep_bdcd_krr
+from .loop import LoopResult, NO_TOL, pad_rounds, run_rounds
+from .dcd import (SVMConfig, dcd_ksvm, coordinate_schedule, L1, L2,
+                  make_dcd_round_fn)
+from .sstep_dcd import sstep_dcd_ksvm, make_sstep_dcd_round_fn
+from .bdcd import KRRConfig, bdcd_krr, block_schedule, make_bdcd_round_fn
+from .sstep_bdcd import sstep_bdcd_krr, make_sstep_bdcd_round_fn
 from .objectives import (ksvm_duality_gap, ksvm_dual_objective,
                          ksvm_primal_objective, krr_closed_form,
-                         krr_dual_objective, relative_solution_error,
-                         ksvm_predict, krr_predict)
+                         krr_dual_objective, krr_rel_residual,
+                         relative_solution_error, ksvm_predict, krr_predict)

@@ -13,6 +13,11 @@ The ``m x b`` slab ``U_k = K(A, V_k^T A)`` only enters through
 ``U_k^T alpha`` and its sampled b x b block, so the default path is
 slab-free via ``GramOperator`` (DESIGN.md §2); ``gram_fn`` forces the
 legacy materialized-slab path (the parity oracle).
+
+Prefer the ``repro.api`` facade (``KernelRidge`` with
+``SolverOptions(method="classical", b=...)``) over calling this
+entrypoint directly — it adds tolerance-based stopping, layout dispatch,
+and prediction on top of the same round protocol (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernels import GramOperator, KernelConfig
+from .loop import run_rounds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,24 +49,20 @@ def block_schedule(key: jax.Array, H: int, m: int, b: int) -> jnp.ndarray:
     return jax.vmap(one)(keys)
 
 
-@partial(jax.jit, static_argnames=("cfg", "record_every", "gram_fn",
-                                   "op_factory"))
-def bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
-             schedule: jnp.ndarray, cfg: KRRConfig,
-             record_every: int = 0,
-             gram_fn: Optional[Callable] = None,
-             op_factory: Optional[Callable] = None,
-             ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    """Run Algorithm 3 for H = schedule.shape[0] iterations."""
-    m = A.shape[0]
-    b = schedule.shape[1]
+def make_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
+                       gram_fn: Optional[Callable] = None,
+                       op_factory: Optional[Callable] = None) -> Callable:
+    """``round_fn(alpha, idx) -> alpha`` for ``loop.run_rounds``: one
+    Algorithm-3 exact b x b block solve."""
     if gram_fn is not None and op_factory is not None:
         raise ValueError("pass either gram_fn (materialized slab) or "
                          "op_factory (slab-free operator), not both")
+    m = A.shape[0]
     inv_lam = 1.0 / cfg.lam
     op = None if gram_fn else (op_factory or GramOperator)(A, cfg.kernel)
 
-    def step(alpha, idx):                     # idx: (b,)
+    def round_fn(alpha, idx):                 # idx: (b,)
+        b = idx.shape[0]
         if gram_fn is not None:               # materialized m x b slab
             U = gram_fn(A, A[idx], cfg.kernel)
             Gblk = U[idx, :]
@@ -70,10 +72,24 @@ def bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
         G = inv_lam * Gblk + m * jnp.eye(b, dtype=A.dtype)
         rhs = y[idx] - m * alpha[idx] - inv_lam * uTa
         dalpha = jnp.linalg.solve(G, rhs)
-        alpha = alpha.at[idx].add(dalpha)
-        return alpha, (alpha if record_every else 0.0)
+        return alpha.at[idx].add(dalpha)
 
-    alpha_H, hist = jax.lax.scan(step, alpha0, schedule)
+    return round_fn
+
+
+@partial(jax.jit, static_argnames=("cfg", "record_every", "gram_fn",
+                                   "op_factory"))
+def bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
+             schedule: jnp.ndarray, cfg: KRRConfig,
+             record_every: int = 0,
+             gram_fn: Optional[Callable] = None,
+             op_factory: Optional[Callable] = None,
+             ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Run Algorithm 3 for H = schedule.shape[0] iterations."""
+    round_fn = make_bdcd_round_fn(A, y, cfg, gram_fn=gram_fn,
+                                  op_factory=op_factory)
+    res = run_rounds(round_fn, alpha0, schedule,
+                     record_state=bool(record_every))
     if record_every:
-        return alpha_H, hist[record_every - 1::record_every]
-    return alpha_H, None
+        return res.state, res.state_hist[record_every - 1::record_every]
+    return res.state, None

@@ -15,6 +15,11 @@ The column is only ever consumed through ``u_k^T alpha`` and ``u_k[i_k]``
 (= K(a_i, a_i)), so the default path reads both through a slab-free
 ``GramOperator`` (DESIGN.md §2); ``gram_fn`` forces the legacy
 materialized-column path, kept as the parity oracle.
+
+Prefer the ``repro.api`` facade (``KernelSVM`` with
+``SolverOptions(method="classical")``) over calling this entrypoint
+directly — it adds tolerance-based stopping, layout dispatch, and
+prediction on top of the same round protocol (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernels import GramOperator, KernelConfig
+from .loop import run_rounds
 
 L1 = "l1"
 L2 = "l2"
@@ -69,6 +75,35 @@ def _dcd_theta(alpha_i, g, eta, nu):
     )
 
 
+def make_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
+                      gram_fn: Optional[Callable] = None,
+                      op_factory: Optional[Callable] = None) -> Callable:
+    """``round_fn(alpha, i) -> alpha`` for ``loop.run_rounds``: one
+    Algorithm-1 coordinate step.  This closure IS the classical solver;
+    ``dcd_ksvm`` and the ``repro.api`` facade both drive it."""
+    if gram_fn is not None and op_factory is not None:
+        raise ValueError("pass either gram_fn (materialized slab) or "
+                         "op_factory (slab-free operator), not both")
+    Atil = y[:, None] * A                       # diag(y) @ A
+    nu, omega = cfg.nu, cfg.omega
+    op = None if gram_fn else (op_factory or GramOperator)(Atil, cfg.kernel)
+
+    def round_fn(alpha, i):
+        idx = i[None]
+        if gram_fn is not None:                 # materialized m x 1 column
+            u = gram_fn(Atil, Atil[idx], cfg.kernel)[:, 0]
+            eta = u[i] + omega
+            g = u @ alpha - 1.0 + omega * alpha[i]
+        else:                                   # slab-free operator path
+            G, uTa = op.round_data(idx, alpha)  # (1, 1), (1,)
+            eta = G[0, 0] + omega
+            g = uTa[0] - 1.0 + omega * alpha[i]
+        theta = _dcd_theta(alpha[i], g, eta, nu)
+        return alpha.at[i].add(theta)
+
+    return round_fn
+
+
 @partial(jax.jit, static_argnames=("cfg", "record_every", "gram_fn",
                                    "op_factory"))
 def dcd_ksvm(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
@@ -82,29 +117,10 @@ def dcd_ksvm(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
     Returns ``(alpha_H, history)`` where ``history`` stacks ``alpha`` every
     ``record_every`` iterations (or ``None`` when 0).
     """
-    Atil = y[:, None] * A                       # diag(y) @ A
-    if gram_fn is not None and op_factory is not None:
-        raise ValueError("pass either gram_fn (materialized slab) or "
-                         "op_factory (slab-free operator), not both")
-    nu, omega = cfg.nu, cfg.omega
-    op = None if gram_fn else (op_factory or GramOperator)(Atil, cfg.kernel)
-
-    def step(alpha, i):
-        idx = i[None]
-        if gram_fn is not None:                 # materialized m x 1 column
-            u = gram_fn(Atil, Atil[idx], cfg.kernel)[:, 0]
-            eta = u[i] + omega
-            g = u @ alpha - 1.0 + omega * alpha[i]
-        else:                                   # slab-free operator path
-            G, uTa = op.round_data(idx, alpha)  # (1, 1), (1,)
-            eta = G[0, 0] + omega
-            g = uTa[0] - 1.0 + omega * alpha[i]
-        theta = _dcd_theta(alpha[i], g, eta, nu)
-        alpha = alpha.at[i].add(theta)
-        return alpha, (alpha if record_every else 0.0)
-
-    alpha_H, hist = jax.lax.scan(step, alpha0, schedule)
+    round_fn = make_dcd_round_fn(A, y, cfg, gram_fn=gram_fn,
+                                 op_factory=op_factory)
+    res = run_rounds(round_fn, alpha0, schedule,
+                     record_state=bool(record_every))
     if record_every:
-        hist = hist[record_every - 1::record_every]
-        return alpha_H, hist
-    return alpha_H, None
+        return res.state, res.state_hist[record_every - 1::record_every]
+    return res.state, None

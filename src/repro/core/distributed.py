@@ -43,8 +43,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .bdcd import KRRConfig
 from .dcd import SVMConfig
 from .kernels import LINEAR, RBF, KernelConfig, apply_epilogue
+from .loop import pad_rounds, run_rounds
 from .sstep_bdcd import sstep_bdcd_inner, sstep_bdcd_krr
-from .sstep_dcd import sstep_dcd_ksvm
+from .sstep_dcd import sstep_dcd_inner, sstep_dcd_ksvm
 
 
 def make_allreduce_gram(axis_name: str, row_sqnorms=None):
@@ -222,8 +223,43 @@ def dist_bdcd_krr(mesh: Mesh, A, y, alpha0, schedule,
 
 
 # --------------------------------------------------------------------------
-# 2D (samples x features) s-step BDCD — beyond-paper optimization.
+# 2D (samples x features) s-step solvers — beyond-paper optimization.
+# Both drive the shared round protocol (core/loop.py) with a shard_map
+# round_fn; the redundant inner phases are the SAME functions the serial
+# solvers use (sstep_dcd_inner / sstep_bdcd_inner).
 # --------------------------------------------------------------------------
+
+def _gather_rows_onehot(flat, row0, m_loc, dtype):
+    """(sb, m_loc) one-hot selector of the globally-indexed sampled rows
+    owned by this data-rank; a psum of ``onehot @ X_loc`` IS the gather."""
+    return (flat[:, None] == (row0 + jnp.arange(m_loc))[None, :]).astype(
+        dtype)
+
+
+def _2d_round_gram(A_loc, flat, rs_loc, kernel, data_axis, model_axis,
+                   row0, m_loc):
+    """Collectives (1)+(2) of the 2D round: gather the sampled rows over
+    ``data``, then one ``model`` psum reducing the row-local dot block
+    with the sb x sb cross-dots riding the same collective.  Returns
+    (onehot, Q_loc, Gblk) — the epilogued row-local slab tile and the
+    replicated sampled cross block."""
+    onehot = _gather_rows_onehot(flat, row0, m_loc, A_loc.dtype)
+    B_loc = jax.lax.psum(onehot @ A_loc, data_axis)       # (sb, n_loc)
+    sb = flat.shape[0]
+    packed = jax.lax.psum(jnp.concatenate(
+        [A_loc @ B_loc.T,                                 # (m_loc, sb)
+         B_loc @ B_loc.T], axis=0), model_axis)
+    dots, cross = packed[:m_loc], packed[m_loc:]
+    assert cross.shape[0] == sb
+    if kernel.name == RBF:
+        cs = jnp.diagonal(cross)                          # ||b_j||^2 free
+        Q_loc = apply_epilogue(dots, kernel, rs_loc, cs)
+        Gblk = apply_epilogue(cross, kernel, cs, cs)
+    else:
+        Q_loc = apply_epilogue(dots, kernel)
+        Gblk = apply_epilogue(cross, kernel)
+    return onehot, Q_loc, Gblk
+
 
 def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
                            cfg: KRRConfig, s: int,
@@ -246,17 +282,17 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
     bandwidth term drops by ~Pd while latency grows 3x — a win exactly in
     the paper's bandwidth-bound regime (news20, Fig. 6-7).  RBF row norms
     are loop-invariant and hoisted out of the round loop entirely.
+
+    Ragged H (H % s != 0) runs a masked final short round, exactly as the
+    serial solvers do (loop.pad_rounds).
     """
     m = A.shape[0]
     pd = mesh.shape[data_axis]
     if m % pd != 0:
         raise ValueError(f"m={m} must divide data axis {pd}")
     m_loc = m // pd
-    H, b = schedule.shape
-    if H % s != 0:
-        raise ValueError("H % s != 0")
     inv_lam = 1.0 / cfg.lam
-    rounds_shape = (H // s, s, b)
+    b = schedule.shape[1]
 
     @partial(shard_map, mesh=mesh,
              in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
@@ -265,29 +301,15 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
     def run(A_loc, y_loc, a0_loc, sched):
         my_d = jax.lax.axis_index(data_axis)
         row0 = my_d * m_loc
-        rounds = sched.reshape(rounds_shape)
         # loop-invariant RBF row norms for the locally-owned samples
         rs_loc = _psummed_row_sqnorms(A_loc, cfg.kernel, model_axis)
 
-        def outer(alpha_loc, idx):                    # idx: (s, b) global
+        def round_fn(alpha_loc, xs):                  # idx: (s, b) global
+            idx, valid = xs
             flat = idx.reshape(s * b)
-            # (1) gather sampled rows across the data axis (one-hot matmul
-            #     keeps it a psum — no gather collective needed).
-            onehot = (flat[:, None] == (row0 + jnp.arange(m_loc))[None, :])
-            onehot = onehot.astype(A_loc.dtype)       # (sb, m_loc)
-            B_loc = jax.lax.psum(onehot @ A_loc, data_axis)   # (sb, n_loc)
-            # (2) row-local dot block + cross-dots, ONE model-axis psum.
-            packed = jax.lax.psum(jnp.concatenate(
-                [A_loc @ B_loc.T,                      # (m_loc, sb)
-                 B_loc @ B_loc.T], axis=0), model_axis)
-            dots, cross = packed[:m_loc], packed[m_loc:]
-            if cfg.kernel.name == RBF:
-                cs = jnp.diagonal(cross)               # ||b_j||^2 for free
-                Q_loc = apply_epilogue(dots, cfg.kernel, rs_loc, cs)
-                Gblk = apply_epilogue(cross, cfg.kernel, cs, cs)
-            else:
-                Q_loc = apply_epilogue(dots, cfg.kernel)
-                Gblk = apply_epilogue(cross, cfg.kernel)
+            onehot, Q_loc, Gblk = _2d_round_gram(
+                A_loc, flat, rs_loc, cfg.kernel, data_axis, model_axis,
+                row0, m_loc)
             # (3) contract the slab tile IMMEDIATELY (it never leaves this
             #     scope) and fuse every data-axis cross term into ONE psum.
             packed = jnp.concatenate([
@@ -302,13 +324,59 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
 
             # redundant inner loop — shared with the serial solver
             dalpha = sstep_bdcd_inner(Gblk, QTalpha, alpha_at, y_at, flat,
-                                      m, inv_lam, s, b)
+                                      m, inv_lam, s, b, valid)
             # locally-owned scatter-add of the deferred update
-            upd = onehot.T @ dalpha.reshape(s * b)      # (m_loc,)
-            return alpha_loc + upd, 0.0
+            return alpha_loc + onehot.T @ dalpha.reshape(s * b)
 
-        out, _ = jax.lax.scan(outer, a0_loc, rounds)
-        return out
+        xs = pad_rounds(sched, s)
+        return run_rounds(round_fn, a0_loc, xs).state
+
+    return run(A, y, alpha0, schedule)
+
+
+def dist_sstep_dcd_ksvm_2d(mesh: Mesh, A, y, alpha0, schedule,
+                           cfg: SVMConfig, s: int,
+                           data_axis: str = "data",
+                           model_axis: str = "model"):
+    """2D-partitioned s-step DCD for K-SVM: Atil[m/Pd, n/Pm] per device,
+    alpha and y sharded over ``data``.  Same collective schedule as the
+    2D BDCD solver (rows gather -> fused model psum -> fused data psum of
+    the contracted round quantities), with the scalar-coordinate inner
+    recurrence shared with the serial solver (``sstep_dcd_inner``)."""
+    m = A.shape[0]
+    pd = mesh.shape[data_axis]
+    if m % pd != 0:
+        raise ValueError(f"m={m} must divide data axis {pd}")
+    m_loc = m // pd
+    nu, omega = cfg.nu, cfg.omega
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
+                       P()),
+             out_specs=P(data_axis), check_vma=False)
+    def run(A_loc, y_loc, a0_loc, sched):
+        my_d = jax.lax.axis_index(data_axis)
+        row0 = my_d * m_loc
+        Atil_loc = y_loc[:, None] * A_loc
+        rs_loc = _psummed_row_sqnorms(Atil_loc, cfg.kernel, model_axis)
+
+        def round_fn(alpha_loc, xs):                  # idx: (s,) global
+            idx, valid = xs
+            onehot, U_loc, G0 = _2d_round_gram(
+                Atil_loc, idx, rs_loc, cfg.kernel, data_axis, model_axis,
+                row0, m_loc)
+            packed = jax.lax.psum(jnp.concatenate([
+                (U_loc.T @ alpha_loc)[:, None],        # (s, 1)
+                (onehot @ alpha_loc)[:, None],         # (s, 1)
+            ], axis=1), data_axis)
+            u_dot_alpha, alpha_at = packed[:, 0], packed[:, 1]
+
+            thetas = sstep_dcd_inner(G0, u_dot_alpha, alpha_at, idx,
+                                     nu, omega, s, valid)
+            return alpha_loc + onehot.T @ thetas
+
+        xs = pad_rounds(sched, s)
+        return run_rounds(round_fn, a0_loc, xs).state
 
     return run(A, y, alpha0, schedule)
 

@@ -1,0 +1,129 @@
+"""Shared round-protocol loop for every solver variant (DESIGN.md §8).
+
+All eight solver variants — {DCD, s-step DCD, BDCD, s-step BDCD} x
+{serial, shard_map} — share the same outer structure: a state pytree
+(alpha), a per-round transition ``round_fn(state, xs_k) -> state``, and a
+schedule of per-round data ``xs``.  ``run_rounds`` is the single driver:
+
+  * fast path (``metric_fn=None``): one ``lax.scan`` — bit-compatible
+    with the legacy hand-written loops, optionally stacking per-round
+    states for the convergence benchmarks;
+  * tolerance path (``metric_fn`` given): one ``lax.while_loop`` that
+    evaluates ``metric_fn(state)`` every ``check_every`` rounds (and at
+    the final round), records it into a fixed-size history buffer, and
+    stops as soon as the metric falls to ``tol``.
+
+``pad_rounds`` removes the old ``H % s == 0`` restriction: the schedule
+is padded to a whole number of s-step rounds and a per-slot validity
+mask rides along, so the final short round computes masked (zero)
+updates for the padded slots — the iterates match the classical solver
+at every ragged H (tests/test_api.py::TestRaggedTail).
+
+Everything here is pure ``lax``; the driver runs identically inside
+``jax.jit`` and inside ``shard_map`` bodies (core/distributed.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NO_TOL = float("-inf")        # sentinel: record the metric, never stop early
+
+
+class LoopResult(NamedTuple):
+    """Output of ``run_rounds`` (a pytree, so it can cross a jit boundary).
+
+    state:       final solver state (alpha).
+    state_hist:  per-round stacked states (scan mode + record_state) or None.
+    metric_hist: (n_check_slots,) metric values (while mode; only the
+                 first ``checks_run`` slots were evaluated — slice with
+                 it, values may legitimately be inf/nan) or None (scan).
+    checks_run:  number of metric evaluations actually performed.
+    rounds_run:  number of rounds actually executed.
+    converged:   metric <= tol at some check point.
+    """
+
+    state: Any
+    state_hist: Optional[Any]
+    metric_hist: Optional[jnp.ndarray]
+    checks_run: jnp.ndarray
+    rounds_run: jnp.ndarray
+    converged: jnp.ndarray
+
+
+def pad_rounds(schedule: jnp.ndarray, s: int):
+    """Reshape an (H, ...) schedule into ((R, s, ...), (R, s)) rounds +
+    validity mask with R = ceil(H/s); padded slots carry index 0 and
+    valid 0.0, so masked round_fns make them exact no-ops."""
+    H = schedule.shape[0]
+    R = -(-H // s)
+    pad = R * s - H
+    if pad:
+        schedule = jnp.concatenate(
+            [schedule, jnp.zeros((pad,) + schedule.shape[1:],
+                                 schedule.dtype)], axis=0)
+    valid = (jnp.arange(R * s) < H).astype(jnp.float32)
+    return (schedule.reshape((R, s) + schedule.shape[1:]),
+            valid.reshape(R, s))
+
+
+def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
+               tol: float = NO_TOL, check_every: int = 1,
+               metric_fn: Optional[Callable] = None,
+               record_state: bool = False) -> LoopResult:
+    """Drive ``R = len(xs)`` rounds of ``round_fn`` (see module docstring).
+
+    xs is a pytree of arrays with a shared leading round axis.  With
+    ``metric_fn=None`` this is exactly the legacy ``lax.scan`` loop;
+    otherwise a ``lax.while_loop`` with early stopping at ``tol``
+    (pass ``tol=NO_TOL`` to record the metric without ever stopping).
+    """
+    R = jax.tree_util.tree_leaves(xs)[0].shape[0]
+
+    if metric_fn is None:
+        def body(state, x):
+            new = round_fn(state, x)
+            return new, (new if record_state else 0.0)
+
+        state, ys = jax.lax.scan(body, state0, xs)
+        return LoopResult(state, ys if record_state else None, None,
+                          jnp.asarray(0), jnp.asarray(R),
+                          jnp.asarray(False))
+
+    if check_every < 1:
+        raise ValueError(f"check_every must be >= 1, got {check_every}")
+    n_checks = -(-R // check_every)
+    mdtype = jax.eval_shape(metric_fn, state0).dtype
+    hist0 = jnp.full((n_checks,), jnp.inf, mdtype)
+    tol_v = jnp.asarray(tol, mdtype)
+
+    def cond(carry):
+        k, _, _, _, conv = carry
+        return (k < R) & jnp.logical_not(conv)
+
+    def body(carry):
+        k, state, hist, nchk, _ = carry
+        x = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, k, 0, keepdims=False),
+            xs)
+        state = round_fn(state, x)
+        do_check = ((k + 1) % check_every == 0) | (k + 1 == R)
+
+        def check(args):
+            st, h, n = args
+            v = metric_fn(st)
+            return h.at[n].set(v), n + 1, v <= tol_v
+
+        def skip(args):
+            return args[1], args[2], jnp.asarray(False)
+
+        hist, nchk, conv = jax.lax.cond(do_check, check, skip,
+                                        (state, hist, nchk))
+        return k + 1, state, hist, nchk, conv
+
+    k, state, hist, nchk, conv = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0), state0, hist0, jnp.asarray(0),
+                     jnp.asarray(False)))
+    return LoopResult(state, None, hist, nchk, k, conv)

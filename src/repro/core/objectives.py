@@ -82,6 +82,21 @@ def relative_solution_error(alpha, alpha_star):
 
 
 @partial(jax.jit, static_argnames=("cfg",))
+def krr_rel_residual(A, y, alpha, cfg: KRRConfig):
+    """Relative residual of the K-RR optimality system,
+    ``||y - ((1/lam) K + m I) alpha|| / ||y||`` — the closed-form-free
+    convergence metric used by the ``repro.api`` tolerance stopper (the
+    paper's rel-error needs alpha*, which costs an m x m factorization).
+    Computed slab-free: one ``K @ alpha`` kernel matvec, no m x m gram.
+    """
+    from .kernels import kmv_slab_free
+    m = A.shape[0]
+    Ka = kmv_slab_free(A, A, alpha, cfg.kernel)
+    r = y - (Ka / cfg.lam + m * alpha)
+    return jnp.linalg.norm(r) / jnp.linalg.norm(y)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
 def ksvm_predict(A_train, y_train, alpha, A_test, cfg: SVMConfig):
     """Decision values f(x) = sum_i alpha_i y_i K(a_i, x)."""
     from .kernels import gram_slab

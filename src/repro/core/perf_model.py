@@ -83,6 +83,26 @@ def storage_words(prob: Problem, P: int, s: int = 1) -> float:
     return prob.f * prob.m * prob.n / P + s * prob.b * prob.m
 
 
+def modeled_fit_cost(m: int, n: int, kernel: str, *, b: int = 1,
+                     s: int = 1, iters: int = 1, P: int = 1,
+                     mach: Machine = None) -> dict:
+    """Hockney-model cost summary for a completed solver run — the
+    ``FitResult.comm`` payload of the ``repro.api`` facade.  ``iters`` is
+    the number of INNER iterations actually executed (early stopping
+    shrinks it), ``P`` the processor count implied by the layout; ``s=1``
+    prices the classical per-iteration collective schedule."""
+    mach = mach or Machine()
+    # price whole communication rounds: a ragged final round (pad-and-
+    # mask) still issues a full-size collective, so round iters up to
+    # ceil(iters/s) rounds — keeping comm['msgs'] consistent with the
+    # FitResult.rounds_run reported for the same run.
+    H = max(iters, 1) if s <= 1 else -(-max(iters, 1) // s) * s
+    prob = Problem(m=m, n=n, b=max(b, 1), H=H, kernel=kernel)
+    cost = (bdcd_cost(prob, mach, P) if s <= 1
+            else sstep_bdcd_cost(prob, mach, P, s))
+    return dict(cost, P=P, s=s, iters=iters)
+
+
 # --------------------------------------------------------------------------
 # On-chip traffic model (EXPERIMENTS.md §Perf): HBM bytes per outer round.
 # The network Hockney model above prices the collective; these two price

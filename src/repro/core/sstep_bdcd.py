@@ -20,6 +20,15 @@ Slab-free by default (DESIGN.md §2): the ``m x sb`` slab ``Q_k`` is only
 consumed through ``Q^T alpha`` and ``Gblk``, both exposed by
 ``GramOperator`` without materializing ``Q_k``.  ``gram_fn`` forces the
 legacy materialized-slab path (parity oracle / paper-faithful baseline).
+
+Ragged schedules are fine: ``H % s != 0`` runs a final short round via the
+pad-and-mask round protocol (``loop.pad_rounds``); padded blocks produce
+exactly-zero updates, so the iterates still match classical BDCD.
+
+Prefer the ``repro.api`` facade (``KernelRidge`` with
+``SolverOptions(method="sstep", s=..., b=...)``) over calling this
+entrypoint directly — it adds tolerance-based stopping, layout dispatch,
+and prediction on top of the same round protocol (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -31,17 +40,20 @@ import jax.numpy as jnp
 
 from .bdcd import KRRConfig
 from .kernels import GramOperator
+from .loop import pad_rounds, run_rounds
 
 
 def sstep_bdcd_inner(Gblk, QTalpha, alpha_at, y_at, flat, m, inv_lam,
-                     s, b):
+                     s, b, valid=None):
     """The redundant local phase shared by the serial and 2D-distributed
     solvers: ``s`` sequential b x b solves with eq. (3) corrections.
 
-    Gblk: (sb, sb), QTalpha: (sb,), alpha_at/y_at: (s, b), flat: (sb,).
-    Returns dalpha: (s, b).
+    Gblk: (sb, sb), QTalpha: (sb,), alpha_at/y_at: (s, b), flat: (sb,),
+    valid: (s,) 1/0 mask for the ragged final round (padded blocks get
+    dalpha = 0).  Returns dalpha: (s, b).
     """
     dtype = alpha_at.dtype
+    ones = jnp.ones((s,), dtype) if valid is None else valid.astype(dtype)
     # collide[t, q, j, p] = 1 iff flat[t*b+q] == flat[j*b+p]
     collide = (flat[:, None] == flat[None, :]).astype(dtype)
     collide4 = collide.reshape(s, b, s, b)
@@ -62,34 +74,28 @@ def sstep_bdcd_inner(Gblk, QTalpha, alpha_at, y_at, flat, m, inv_lam,
                - inv_lam * jax.lax.dynamic_slice_in_dim(QTalpha, j * b, b)
                - inv_lam * uv)
         sol = jnp.linalg.solve(G, rhs)
-        return dalpha.at[j].set(sol)
+        return dalpha.at[j].set(sol * ones[j])
 
     return jax.lax.fori_loop(0, s, inner, jnp.zeros((s, b), dtype))
 
 
-@partial(jax.jit, static_argnames=("cfg", "s", "record_rounds", "gram_fn",
-                                   "op_factory"))
-def sstep_bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
-                   schedule: jnp.ndarray, cfg: KRRConfig, s: int,
-                   record_rounds: bool = False,
-                   gram_fn: Optional[Callable] = None,
-                   op_factory: Optional[Callable] = None,
-                   ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    """Run Algorithm 4.  ``schedule`` is the (H, b) block schedule from
-    ``bdcd.block_schedule``; H % s == 0 required."""
-    H, b = schedule.shape
-    if H % s != 0:
-        raise ValueError(f"H={H} must be divisible by s={s}")
+def make_sstep_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
+                             s: int,
+                             gram_fn: Optional[Callable] = None,
+                             op_factory: Optional[Callable] = None,
+                             ) -> Callable:
+    """``round_fn(alpha, (idx, valid)) -> alpha`` for ``loop.run_rounds``:
+    one Algorithm-4 outer round; idx: (s, b), valid: (s,)."""
     if gram_fn is not None and op_factory is not None:
         raise ValueError("pass either gram_fn (materialized slab) or "
                          "op_factory (slab-free operator), not both")
-
     m = A.shape[0]
     inv_lam = 1.0 / cfg.lam
-    rounds = schedule.reshape(H // s, s, b)
     op = None if gram_fn else (op_factory or GramOperator)(A, cfg.kernel)
 
-    def outer(alpha, idx):                     # idx: (s, b)
+    def round_fn(alpha, xs):
+        idx, valid = xs                        # idx: (s, b)
+        b = idx.shape[1]
         flat = idx.reshape(s * b)
         # --- communication phase ----------------------------------------
         if gram_fn is not None:                # materialized m x sb slab
@@ -103,9 +109,25 @@ def sstep_bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
 
         # --- redundant local phase: s block solves -----------------------
         dalpha = sstep_bdcd_inner(Gblk, QTalpha, alpha_at, y_at, flat,
-                                  m, inv_lam, s, b)
-        alpha = alpha.at[flat].add(dalpha.reshape(s * b))
-        return alpha, (alpha if record_rounds else 0.0)
+                                  m, inv_lam, s, b, valid)
+        return alpha.at[flat].add(dalpha.reshape(s * b))
 
-    alpha_H, hist = jax.lax.scan(outer, alpha0, rounds)
-    return (alpha_H, hist) if record_rounds else (alpha_H, None)
+    return round_fn
+
+
+@partial(jax.jit, static_argnames=("cfg", "s", "record_rounds", "gram_fn",
+                                   "op_factory"))
+def sstep_bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
+                   schedule: jnp.ndarray, cfg: KRRConfig, s: int,
+                   record_rounds: bool = False,
+                   gram_fn: Optional[Callable] = None,
+                   op_factory: Optional[Callable] = None,
+                   ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Run Algorithm 4.  ``schedule`` is the (H, b) block schedule from
+    ``bdcd.block_schedule``; ragged H (H % s != 0) runs a masked final
+    short round."""
+    round_fn = make_sstep_bdcd_round_fn(A, y, cfg, s, gram_fn=gram_fn,
+                                        op_factory=op_factory)
+    xs = pad_rounds(schedule, s)
+    res = run_rounds(round_fn, alpha0, xs, record_state=record_rounds)
+    return res.state, (res.state_hist if record_rounds else None)

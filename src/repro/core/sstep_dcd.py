@@ -18,6 +18,15 @@ block, so the solver reads both through a ``GramOperator`` and the slab
 never exists in HBM.  Pass ``gram_fn`` (e.g. ``core.kernels.gram_slab`` or
 the Pallas fused gram kernel) to force the legacy materialized-slab path —
 kept as the parity oracle and the paper-faithful baseline.
+
+Ragged schedules are fine: ``H % s != 0`` runs a final short round via the
+pad-and-mask round protocol (``loop.pad_rounds``); padded slots produce
+exactly-zero updates, so the iterates still match classical DCD.
+
+Prefer the ``repro.api`` facade (``KernelSVM`` with
+``SolverOptions(method="sstep", s=...)``) over calling this entrypoint
+directly — it adds tolerance-based stopping, layout dispatch, and
+prediction on top of the same round protocol (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -29,6 +38,73 @@ import jax.numpy as jnp
 
 from .dcd import SVMConfig
 from .kernels import GramOperator
+from .loop import pad_rounds, run_rounds
+
+
+def sstep_dcd_inner(G0, u_dot_alpha, alpha_at, idx_s, nu, omega, s,
+                    valid=None):
+    """The redundant local phase shared by the serial and 2D-distributed
+    solvers: ``s`` sequential scalar solves with gradient corrections
+    (paper Alg. 2 lines 14-23).
+
+    G0: (s, s) sampled cross block, u_dot_alpha: (s,), alpha_at: (s,),
+    idx_s: (s,) the round's coordinates, valid: (s,) 1/0 mask for the
+    ragged final round (padded slots get theta = 0).  Returns thetas (s,).
+    """
+    dtype = alpha_at.dtype
+    ones = jnp.ones((s,), dtype) if valid is None else valid.astype(dtype)
+    # same[t, j] = 1 iff i_{sk+t} == i_{sk+j} (for the omega & rho terms)
+    same = (idx_s[:, None] == idx_s[None, :]).astype(dtype)
+    eta = jnp.diagonal(G0) + omega               # (s,)
+
+    def inner(j, thetas):
+        tmask = (jnp.arange(s) < j).astype(dtype)    # t < j
+        prior = thetas * tmask
+        rho = alpha_at[j] + prior @ same[:, j]
+        g = (u_dot_alpha[j] - 1.0 + omega * alpha_at[j]
+             + prior @ G0[:, j]
+             + omega * (prior @ same[:, j]))
+        cand = jnp.clip(rho - g, 0.0, nu) - rho
+        theta = jnp.where(
+            jnp.abs(cand) != 0.0,
+            jnp.clip(rho - g / eta[j], 0.0, nu) - rho,
+            0.0,
+        )
+        return thetas.at[j].set(theta * ones[j])
+
+    return jax.lax.fori_loop(0, s, inner, jnp.zeros((s,), dtype))
+
+
+def make_sstep_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
+                            s: int,
+                            gram_fn: Optional[Callable] = None,
+                            op_factory: Optional[Callable] = None,
+                            ) -> Callable:
+    """``round_fn(alpha, (idx_s, valid)) -> alpha`` for ``loop.run_rounds``:
+    one Algorithm-2 outer round (communication phase + s local solves)."""
+    if gram_fn is not None and op_factory is not None:
+        raise ValueError("pass either gram_fn (materialized slab) or "
+                         "op_factory (slab-free operator), not both")
+    Atil = y[:, None] * A
+    nu, omega = cfg.nu, cfg.omega
+    op = None if gram_fn else (op_factory or GramOperator)(Atil, cfg.kernel)
+
+    def round_fn(alpha, xs):
+        idx_s, valid = xs
+        # --- communication phase: one fused round, one (would-be) psum ---
+        if gram_fn is not None:                  # materialized m x s slab
+            U = gram_fn(Atil, Atil[idx_s], cfg.kernel)
+            G0 = U[idx_s, :]                     # V_k^T U_k, (s, s)
+            u_dot_alpha = U.T @ alpha            # (s,)
+        else:                                    # slab-free operator path
+            G0, u_dot_alpha = op.round_data(idx_s, alpha)
+
+        # --- redundant local phase: s sequential scalar solves ----------
+        thetas = sstep_dcd_inner(G0, u_dot_alpha, alpha[idx_s], idx_s,
+                                 nu, omega, s, valid)
+        return alpha.at[idx_s].add(thetas)       # alpha_{sk+s}
+
+    return round_fn
 
 
 @partial(jax.jit, static_argnames=("cfg", "s", "record_rounds", "gram_fn",
@@ -39,57 +115,15 @@ def sstep_dcd_ksvm(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
                    gram_fn: Optional[Callable] = None,
                    op_factory: Optional[Callable] = None,
                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    """Run Algorithm 2.  ``schedule`` has length H and must satisfy H % s == 0.
+    """Run Algorithm 2 over ``ceil(H/s)`` rounds (ragged tails allowed).
 
     ``op_factory(Atil, kernel_cfg)`` overrides the slab-free GramOperator
     (e.g. with the Pallas KMV backend from ``repro.kernels.ops`` or the
     all-reduce operator from ``core.distributed``).  ``gram_fn(Atil, rows,
     kernel_cfg)`` instead selects the materialized-slab path.
     """
-    H = schedule.shape[0]
-    if H % s != 0:
-        raise ValueError(f"H={H} must be divisible by s={s}")
-    if gram_fn is not None and op_factory is not None:
-        raise ValueError("pass either gram_fn (materialized slab) or "
-                         "op_factory (slab-free operator), not both")
-
-    Atil = y[:, None] * A
-    nu, omega = cfg.nu, cfg.omega
-    rounds = schedule.reshape(H // s, s)
-    op = None if gram_fn else (op_factory or GramOperator)(Atil, cfg.kernel)
-
-    def outer(alpha, idx_s):
-        # --- communication phase: one fused round, one (would-be) psum ---
-        if gram_fn is not None:                  # materialized m x s slab
-            U = gram_fn(Atil, Atil[idx_s], cfg.kernel)
-            G0 = U[idx_s, :]                     # V_k^T U_k, (s, s)
-            u_dot_alpha = U.T @ alpha            # (s,)
-        else:                                    # slab-free operator path
-            G0, u_dot_alpha = op.round_data(idx_s, alpha)
-        eta = jnp.diagonal(G0) + omega           # (s,)
-        alpha_at = alpha[idx_s]                  # (s,)
-        # same[t, j] = 1 iff i_{sk+t} == i_{sk+j} (for the omega & rho terms)
-        same = (idx_s[:, None] == idx_s[None, :]).astype(alpha.dtype)
-
-        # --- redundant local phase: s sequential scalar solves ----------
-        def inner(j, thetas):
-            mask = (jnp.arange(s) < j).astype(alpha.dtype)   # t < j
-            prior = thetas * mask
-            rho = alpha_at[j] + prior @ same[:, j]
-            g = (u_dot_alpha[j] - 1.0 + omega * alpha_at[j]
-                 + prior @ G0[:, j]
-                 + omega * (prior @ same[:, j]))
-            cand = jnp.clip(rho - g, 0.0, nu) - rho
-            theta = jnp.where(
-                jnp.abs(cand) != 0.0,
-                jnp.clip(rho - g / eta[j], 0.0, nu) - rho,
-                0.0,
-            )
-            return thetas.at[j].set(theta)
-
-        thetas = jax.lax.fori_loop(0, s, inner, jnp.zeros((s,), alpha.dtype))
-        alpha = alpha.at[idx_s].add(thetas)              # alpha_{sk+s}
-        return alpha, (alpha if record_rounds else 0.0)
-
-    alpha_H, hist = jax.lax.scan(outer, alpha0, rounds)
-    return (alpha_H, hist) if record_rounds else (alpha_H, None)
+    round_fn = make_sstep_dcd_round_fn(A, y, cfg, s, gram_fn=gram_fn,
+                                       op_factory=op_factory)
+    xs = pad_rounds(schedule, s)
+    res = run_rounds(round_fn, alpha0, xs, record_state=record_rounds)
+    return res.state, (res.state_hist if record_rounds else None)

@@ -1,27 +1,26 @@
-"""End-to-end kernel-method driver (the paper's workload).
+"""End-to-end kernel-method driver (the paper's workload), on the
+``repro.api`` facade.
 
     PYTHONPATH=src python -m repro.launch.solve --problem ksvm \
         --dataset duke --s 32 --H 2048
     PYTHONPATH=src python -m repro.launch.solve --problem krr \
-        --dataset abalone --b 64 --s 16 --H 1024
+        --dataset abalone --b 64 --s 16 --H 1024 --tol 1e-4
 
 Solves K-SVM (DCD / s-step DCD) or K-RR (BDCD / s-step BDCD) on a
 synthetic dataset matching the paper's Table 2 scales, reports duality
-gap / relative error, accuracy, and classical-vs-s-step agreement.
+gap / relative residual, accuracy, classical-vs-s-step agreement, and
+the modeled communication cost of each run (``FitResult.comm``).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (KernelConfig, KRRConfig, SVMConfig, bdcd_krr,
-                        block_schedule, coordinate_schedule, dcd_ksvm,
-                        krr_closed_form, ksvm_duality_gap, ksvm_predict,
-                        relative_solution_error, sstep_bdcd_krr,
-                        sstep_dcd_ksvm)
+from repro.api import KernelRidge, KernelSVM, SolverOptions
+from repro.core import (KernelConfig, krr_closed_form, ksvm_duality_gap,
+                        relative_solution_error)
 from repro.data import synthetic
 
 
@@ -38,6 +37,10 @@ def main(argv=None):
     ap.add_argument("--H", type=int, default=1024)
     ap.add_argument("--s", type=int, default=32)
     ap.add_argument("--b", type=int, default=1)
+    ap.add_argument("--layout", default="serial",
+                    choices=("serial", "1d", "2d"))
+    ap.add_argument("--tol", type=float, default=0.0,
+                    help="early-stop tolerance (0 = run the full budget)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -45,47 +48,51 @@ def main(argv=None):
     A, y = synthetic.load(args.dataset, jax.random.key(args.seed))
     m = A.shape[0]
     print(f"{args.problem} on {args.dataset}: m={m} n={A.shape[1]} "
-          f"kernel={args.kernel} H={args.H} s={args.s}")
-    a0 = jnp.zeros(m)
+          f"kernel={args.kernel} H={args.H} s={args.s} "
+          f"layout={args.layout} tol={args.tol}")
+
+    def opts(method, s=1):
+        return SolverOptions(method=method, s=s, b=max(args.b, 1),
+                             layout=args.layout, tol=args.tol,
+                             max_iters=args.H, seed=args.seed + 1)
 
     if args.problem == "ksvm":
-        cfg = SVMConfig(C=args.C, loss=args.loss, kernel=kern)
-        sched = coordinate_schedule(jax.random.key(args.seed + 1),
-                                    args.H, m)
-        t0 = time.time()
-        a_ref, _ = dcd_ksvm(A, y, a0, sched, cfg)
-        jax.block_until_ready(a_ref)
-        t_ref = time.time() - t0
-        t0 = time.time()
-        a_s, _ = sstep_dcd_ksvm(A, y, a0, sched, cfg, s=args.s)
-        jax.block_until_ready(a_s)
-        t_s = time.time() - t0
-        gap = float(ksvm_duality_gap(A, y, a_s, cfg))
-        acc = float(jnp.mean(jnp.sign(
-            ksvm_predict(A, y, a_s, A, cfg)) == y))
-        print(f"DCD {t_ref:.2f}s | s-step {t_s:.2f}s "
-              f"({t_ref/t_s:.2f}x on this host)")
+        ref = KernelSVM(C=args.C, loss=args.loss, kernel=kern,
+                        options=opts("classical"))
+        r_ref = ref.fit(A, y)
+        est = KernelSVM(C=args.C, loss=args.loss, kernel=kern,
+                        options=opts("sstep", args.s))
+        r_s = est.fit(A, y)
+        gap = float(ksvm_duality_gap(A, y, r_s.alpha, est.cfg))
+        acc = float(jnp.mean(est.predict(A) == y))
+        print(f"DCD {r_ref.wall_time_s:.2f}s | s-step "
+              f"{r_s.wall_time_s:.2f}s "
+              f"({r_ref.wall_time_s / r_s.wall_time_s:.2f}x on this host)")
         print(f"duality gap {gap:.3e} | train acc {acc:.3f} | "
               f"max|a_s - a_dcd| = "
-              f"{float(jnp.max(jnp.abs(a_s - a_ref))):.3e}")
+              f"{float(jnp.max(jnp.abs(r_s.alpha - r_ref.alpha))):.3e}")
     else:
-        cfg = KRRConfig(lam=args.lam, kernel=kern)
-        b = max(args.b, 1)
-        sched = block_schedule(jax.random.key(args.seed + 1), args.H, m, b)
-        astar = krr_closed_form(A, y, cfg)
-        t0 = time.time()
-        a_ref, _ = bdcd_krr(A, y, a0, sched, cfg)
-        jax.block_until_ready(a_ref)
-        t_ref = time.time() - t0
-        t0 = time.time()
-        a_s, _ = sstep_bdcd_krr(A, y, a0, sched, cfg, s=args.s)
-        jax.block_until_ready(a_s)
-        t_s = time.time() - t0
-        print(f"BDCD {t_ref:.2f}s | s-step {t_s:.2f}s "
-              f"({t_ref/t_s:.2f}x on this host)")
+        reg_ref = KernelRidge(lam=args.lam, kernel=kern,
+                              options=opts("classical"))
+        r_ref = reg_ref.fit(A, y)
+        reg = KernelRidge(lam=args.lam, kernel=kern,
+                          options=opts("sstep", args.s))
+        r_s = reg.fit(A, y)
+        astar = krr_closed_form(A, y, reg.cfg)
+        print(f"BDCD {r_ref.wall_time_s:.2f}s | s-step "
+              f"{r_s.wall_time_s:.2f}s "
+              f"({r_ref.wall_time_s / r_s.wall_time_s:.2f}x on this host)")
         print(f"rel err vs closed form: bdcd="
-              f"{float(relative_solution_error(a_ref, astar)):.3e} "
-              f"sstep={float(relative_solution_error(a_s, astar)):.3e}")
+              f"{float(relative_solution_error(r_ref.alpha, astar)):.3e} "
+              f"sstep={float(relative_solution_error(r_s.alpha, astar)):.3e}")
+
+    for name, r in (("classical", r_ref), ("sstep", r_s)):
+        stop = (f"converged@{r.iters_run}" if r.converged
+                else f"budget({r.iters_run})")
+        print(f"{name:9s}: {stop} rounds={r.rounds_run} "
+              f"modeled comm {r.comm['words']:.3e} words / "
+              f"{r.comm['msgs']:.1f} msgs / {r.comm['time']*1e3:.2f} ms "
+              f"(P={r.comm['P']})")
 
 
 if __name__ == "__main__":

@@ -11,13 +11,15 @@ import jax                                                    # noqa: E402
 import jax.numpy as jnp                                       # noqa: E402
 import numpy as np                                            # noqa: E402
 
+from repro.api import KernelRidge, KernelSVM, SolverOptions  # noqa: E402
 from repro.core import (KernelConfig, KRRConfig, SVMConfig, bdcd_krr,
                         block_schedule, coordinate_schedule, dcd_ksvm,
                         sstep_bdcd_krr)                       # noqa: E402
 from repro.core.distributed import (dist_bdcd_krr, dist_dcd_ksvm,
                                     dist_sstep_bdcd_krr,
                                     dist_sstep_bdcd_krr_2d,
-                                    dist_sstep_dcd_ksvm)      # noqa: E402
+                                    dist_sstep_dcd_ksvm,
+                                    dist_sstep_dcd_ksvm_2d)   # noqa: E402
 from repro.data.synthetic import (classification_dataset,
                                   regression_dataset)         # noqa: E402
 
@@ -47,6 +49,31 @@ def main():
     if float(jnp.max(jnp.abs(got - ref))) > 5e-5:
         failures.append("dcd classical")
 
+    # 2D DCD (samples x features) vs serial classical, incl. ragged H
+    for H2 in (32, 27):
+        sched2 = coordinate_schedule(jax.random.key(1), H2, 64)
+        ref2, _ = dcd_ksvm(A, y, a0, sched2, cfg)
+        got2 = dist_sstep_dcd_ksvm_2d(mesh, A, y, a0, sched2, cfg, s=8)
+        err2 = float(jnp.max(jnp.abs(got2 - ref2)))
+        print(f"dcd-2d H={H2} s=8 maxdiff={err2:.3e}")
+        if err2 > 5e-5:
+            failures.append(f"dcd2d H={H2}")
+
+    # ---- repro.api facade on the REAL 8-device mesh ----
+    # every (method, layout), with an explicit mesh and a ragged budget
+    for method in ("classical", "sstep"):
+        for layout in ("1d", "2d"):
+            opts = SolverOptions(method=method, s=8, layout=layout,
+                                 mesh=mesh, max_iters=27)
+            clf = KernelSVM(C=1.0, loss="l1", kernel=KernelConfig("rbf"),
+                            options=opts)
+            res = clf.fit(A, y)
+            reff, _ = dcd_ksvm(A, y, a0, res.schedule, clf.cfg)
+            err = float(jnp.max(jnp.abs(res.alpha - reff)))
+            print(f"api ksvm {method}/{layout} maxdiff={err:.3e}")
+            if err > 5e-5:
+                failures.append(f"api ksvm {method}/{layout}")
+
     # ---- K-RR: serial BDCD vs distributed (1D + 2D layouts) ----
     A, y = regression_dataset(jax.random.key(2), m=64, n=32)
     kcfg = KRRConfig(lam=0.7, kernel=KernelConfig("polynomial", degree=2,
@@ -69,6 +96,18 @@ def main():
     got = dist_bdcd_krr(mesh, A, y, a0, bsched, kcfg)
     if float(jnp.max(jnp.abs(got - ref))) > 5e-5:
         failures.append("bdcd classical")
+
+    # facade K-RR on the real mesh: tolerance-stopped 1d + 2d runs
+    for layout in ("1d", "2d"):
+        opts = SolverOptions(method="sstep", s=4, b=4, layout=layout,
+                             mesh=mesh, tol=5e-2, check_every=2,
+                             max_iters=400)
+        res = KernelRidge(lam=1.0, kernel=KernelConfig("rbf"),
+                          options=opts).fit(A, y)
+        print(f"api krr {layout} tol-stop: converged={res.converged} "
+              f"iters={res.iters_run} metric={res.history[-1]:.3e}")
+        if not (res.converged and res.iters_run < 400):
+            failures.append(f"api krr {layout} tol")
 
     # ---- linear kernel: the fully-contracted (no m x sb psum) path ----
     kcfg = KRRConfig(lam=0.7, kernel=KernelConfig("linear"))
