@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
   fig4   running-time breakdown                             [paper Figs 4/7/8]
   table4 block-size ablation                                [paper Table 4]
   fig5   slab-free vs materialized round (HBM bytes/time)   [EXPERIMENTS §Perf]
+  fig6   predict throughput: exact vs low-rank representation,
+         batched slab-free vs legacy dense                  [DESIGN §9]
   roofline  assigned-arch roofline table from the dry-run   [EXPERIMENTS §Roofline]
 
 ``--fast`` shrinks datasets/iterations (used by CI / test_system).
@@ -27,7 +29,7 @@ def main() -> None:
 
     from benchmarks import (fig1_dcd_convergence, fig2_bdcd_convergence,
                             fig3_scaling, fig4_breakdown, fig5_slabfree,
-                            roofline, table4_blocksize)
+                            fig6_predict, roofline, table4_blocksize)
 
     def paper_dist_subprocess(fast=False):
         # needs its own process: it forces a 16-device host platform
@@ -54,6 +56,7 @@ def main() -> None:
         "fig4": fig4_breakdown.run,
         "table4": table4_blocksize.run,
         "fig5": fig5_slabfree.run,
+        "fig6": fig6_predict.run,
         "paper_dist": paper_dist_subprocess,
         "roofline": roofline.run,
     }

@@ -28,6 +28,22 @@ Convergence metrics: K-SVM stops on the duality gap
 the optimality system (``objectives.krr_rel_residual``) — the paper's
 rel-error needs the closed-form alpha*, which costs an m x m
 factorization the facade refuses to hide inside ``fit``.
+
+Representations (DESIGN.md §9): ``SolverOptions(approx="nystrom",
+landmarks=l)`` swaps the exact kernel for a rank-l Nystrom feature map —
+built ONCE per fit, consumed by the same solvers through a
+``LowRankGramOperator`` (every reduction O(l)-wide; convergence metrics
+evaluate under the SAME approximate kernel, so tolerance stopping stays
+meaningful), and reused at predict time.  K-SVM caveat: the exact path
+keeps the paper implementation's ``K(diag(y) A)`` training gram while
+the low-rank path uses the textbook ``diag(y) K~ diag(y)`` (feature
+scaling does not commute with nonlinear epilogues), so exact-vs-approx
+K-SVM solutions are directly comparable only for linear kernels — for
+K-RR (no y-scaling) the l -> m limit recovers the exact solution for
+every kernel (see ``LowRankGramOperator.scale_rows``).  Prediction always runs through
+the batched slab-free subsystem (``core/predict.py``): the dense
+``(q x m)`` test-kernel slab of the legacy ``objectives.*_predict``
+oracles never materializes.
 """
 from __future__ import annotations
 
@@ -42,18 +58,23 @@ import numpy as np
 
 from repro.compat import make_mesh_auto
 from repro.core import (KernelConfig, KRRConfig, SVMConfig, NO_TOL,
+                        ExactGramOperator,
                         bdcd_krr, block_schedule, coordinate_schedule,
-                        dcd_ksvm, gram_slab, krr_predict, krr_rel_residual,
-                        ksvm_duality_gap, ksvm_predict,
+                        dcd_ksvm, gram_slab, krr_rel_residual,
+                        ksvm_duality_gap, ksvm_duality_gap_lowrank,
                         make_bdcd_round_fn, make_dcd_round_fn,
                         make_sstep_bdcd_round_fn, make_sstep_dcd_round_fn,
                         pad_rounds, run_rounds, sstep_bdcd_krr,
                         sstep_dcd_ksvm)
 from repro.core import distributed
+from repro.core.nystrom import (LANDMARK_METHODS, fit_nystrom,
+                                lowrank_operator)
 from repro.core.perf_model import modeled_fit_cost
+from repro.core.predict import BatchedPredictor
 
 METHODS = ("classical", "sstep")
 LAYOUTS = ("serial", "1d", "2d")
+APPROX = (None, "nystrom")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +99,15 @@ class SolverOptions:
     max_iters:   total inner-iteration budget H.  H % s != 0 is fine —
                  the final short round is handled by pad-and-mask.
     record:      keep the metric history even when tol == 0.
-    seed:        PRNG seed for the coordinate/block schedule.
+    seed:        PRNG seed for the coordinate/block schedule (and, folded,
+                 for the landmark draw when approx is on).
+    approx:      kernel representation: None (exact) or "nystrom" —
+                 rank-``landmarks`` feature map built once per fit, then
+                 every per-round reduction runs O(landmarks)-wide through
+                 a ``LowRankGramOperator`` (DESIGN.md §9) and prediction
+                 serves through the same map.
+    landmarks:   Nystrom rank l (clipped to m at fit time).
+    landmark_method: "uniform" row sampling or "kmeans" centroids.
     """
 
     method: str = "sstep"
@@ -92,6 +121,9 @@ class SolverOptions:
     max_iters: int = 1024
     record: bool = False
     seed: int = 0
+    approx: Optional[str] = None
+    landmarks: int = 256
+    landmark_method: str = "uniform"
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -100,7 +132,7 @@ class SolverOptions:
         if self.layout not in LAYOUTS:
             raise ValueError(
                 f"layout must be one of {LAYOUTS}, got {self.layout!r}")
-        for name in ("s", "b", "max_iters", "check_every"):
+        for name in ("s", "b", "max_iters", "check_every", "landmarks"):
             v = getattr(self, name)
             if not isinstance(v, int) or v < 1:
                 raise ValueError(f"{name} must be a positive int, got {v!r}")
@@ -110,6 +142,13 @@ class SolverOptions:
             raise ValueError("the 2d layout is slab-free by construction; "
                              "slab_free=False is only meaningful for the "
                              "serial and 1d layouts")
+        if self.approx not in APPROX:
+            raise ValueError(
+                f"approx must be one of {APPROX}, got {self.approx!r}")
+        if self.landmark_method not in LANDMARK_METHODS:
+            raise ValueError(f"landmark_method must be one of "
+                             f"{LANDMARK_METHODS}, got "
+                             f"{self.landmark_method!r}")
 
     @property
     def s_eff(self) -> int:
@@ -135,6 +174,15 @@ class FitResult:
     wall_time_s: float
     comm: dict                     # Hockney model: flops/words/msgs/time
     options: SolverOptions
+    representation: str = "exact"  # "exact" | "nystrom(l=...)"
+
+
+def _check_predict_batch(batch) -> int:
+    """Eager validation, mirroring SolverOptions' integer knobs."""
+    if not isinstance(batch, int) or batch < 1:
+        raise ValueError(
+            f"predict_batch must be a positive int, got {batch!r}")
+    return batch
 
 
 def _as_kernel(kernel: Union[str, KernelConfig, None]) -> KernelConfig:
@@ -161,42 +209,54 @@ def _resolve_mesh(opts: SolverOptions):
     return opts.mesh
 
 
-@partial(jax.jit, static_argnames=("cfg", "s", "check_every", "slab_free"))
+@partial(jax.jit, static_argnames=("cfg", "s", "check_every", "slab_free",
+                                   "lowrank"))
 def _ksvm_serial_tol(A, y, a0, schedule, tol, *, cfg: SVMConfig, s: int,
-                     check_every: int, slab_free: bool):
+                     check_every: int, slab_free: bool, op=None,
+                     lowrank: bool = False):
     gram = None if slab_free else gram_slab
+    op = None if gram is not None else op
     if s == 1:
-        rf, xs = make_dcd_round_fn(A, y, cfg, gram_fn=gram), schedule
+        rf, xs = make_dcd_round_fn(A, y, cfg, gram_fn=gram, op=op), schedule
     else:
-        rf = make_sstep_dcd_round_fn(A, y, cfg, s, gram_fn=gram)
+        rf = make_sstep_dcd_round_fn(A, y, cfg, s, gram_fn=gram, op=op)
         xs = pad_rounds(schedule, s)
+    # low-rank runs (A is Phi) check the gap through the O(m l) factored
+    # form — the generic oracle would build the m x m gram of Phi
+    metric = (ksvm_duality_gap_lowrank if lowrank else ksvm_duality_gap)
     return run_rounds(rf, a0, xs, tol=tol, check_every=check_every,
-                      metric_fn=lambda a: ksvm_duality_gap(A, y, a, cfg))
+                      metric_fn=lambda a: metric(A, y, a, cfg))
 
 
 @partial(jax.jit, static_argnames=("cfg", "s", "check_every", "slab_free"))
 def _krr_serial_tol(A, y, a0, schedule, tol, *, cfg: KRRConfig, s: int,
-                    check_every: int, slab_free: bool):
+                    check_every: int, slab_free: bool, op=None):
     gram = None if slab_free else gram_slab
+    op = None if gram is not None else op
     if s == 1:
-        rf, xs = make_bdcd_round_fn(A, y, cfg, gram_fn=gram), schedule
+        rf, xs = make_bdcd_round_fn(A, y, cfg, gram_fn=gram, op=op), schedule
     else:
-        rf = make_sstep_bdcd_round_fn(A, y, cfg, s, gram_fn=gram)
+        rf = make_sstep_bdcd_round_fn(A, y, cfg, s, gram_fn=gram, op=op)
         xs = pad_rounds(schedule, s)
     return run_rounds(rf, a0, xs, tol=tol, check_every=check_every,
                       metric_fn=lambda a: krr_rel_residual(A, y, a, cfg))
 
 
-def _serial_fast(problem, A, y, a0, schedule, cfg, s, slab_free):
-    """tol == 0, no recording: the legacy jitted entrypoints verbatim."""
+def _serial_fast(problem, A, y, a0, schedule, cfg, s, slab_free, op=None):
+    """tol == 0, no recording: the legacy jitted entrypoints verbatim
+    (driven by the facade-built operator when slab-free)."""
     gram = None if slab_free else gram_slab
+    op = None if gram is not None else op
     if problem == "ksvm":
         if s == 1:
-            return dcd_ksvm(A, y, a0, schedule, cfg, gram_fn=gram)[0]
-        return sstep_dcd_ksvm(A, y, a0, schedule, cfg, s, gram_fn=gram)[0]
+            return dcd_ksvm(A, y, a0, schedule, cfg, gram_fn=gram,
+                            op=op)[0]
+        return sstep_dcd_ksvm(A, y, a0, schedule, cfg, s, gram_fn=gram,
+                              op=op)[0]
     if s == 1:
-        return bdcd_krr(A, y, a0, schedule, cfg, gram_fn=gram)[0]
-    return sstep_bdcd_krr(A, y, a0, schedule, cfg, s, gram_fn=gram)[0]
+        return bdcd_krr(A, y, a0, schedule, cfg, gram_fn=gram, op=op)[0]
+    return sstep_bdcd_krr(A, y, a0, schedule, cfg, s, gram_fn=gram,
+                          op=op)[0]
 
 
 @partial(jax.jit, static_argnames=("problem", "layout", "mesh", "cfg",
@@ -226,53 +286,96 @@ def _dist_call(problem, layout, mesh, A, y, a0, schedule, cfg, s,
         mesh, A, y, a0, schedule, cfg, s=s)
 
 
-def _fit(problem: str, A, y, cfg, opts: SolverOptions) -> FitResult:
+def _build_representation(A, cfg, opts: SolverOptions):
+    """The once-per-fit representation build (DESIGN.md §9): returns
+    ``(op, A_solve, cfg_solve)`` where ``op`` is the raw-data
+    ``GramOperator`` the estimator keeps for prediction, and
+    ``(A_solve, cfg_solve)`` is the (data, config) pair the solvers and
+    convergence metrics run on — ``(A, cfg)`` for exact, ``(Phi,
+    linear-kernel cfg)`` for Nystrom (the same solvers then perform
+    O(landmarks)-wide reductions; the s-step schedule is untouched)."""
+    if opts.approx is None:
+        return ExactGramOperator(A, cfg.kernel), A, cfg
+    l = min(opts.landmarks, A.shape[0])
+    lkey = jax.random.fold_in(jax.random.key(opts.seed), 1)
+    fmap = fit_nystrom(lkey, A, cfg.kernel, l,
+                       method=opts.landmark_method)
+    op = lowrank_operator(fmap, A)
+    cfg_lin = dataclasses.replace(cfg, kernel=KernelConfig("linear"))
+    return op, op.Phi, cfg_lin
+
+
+def _fit(problem: str, A, y, cfg, opts: SolverOptions):
     m, n = A.shape
     H = opts.max_iters
     s = opts.s_eff
     b = opts.b if problem == "krr" else 1
     key = jax.random.key(opts.seed)
+
+    t0 = time.perf_counter()
+    # representation build (inside the clock: it is part of the solve
+    # cost, mirrored by comm["setup_time"] in the Hockney model)
+    rep_op, A_s, cfg_s = _build_representation(A, cfg, opts)
     if problem == "ksvm":
         schedule = coordinate_schedule(key, H, m)
         metric_name = "duality_gap"
-        metric_host = lambda a: float(ksvm_duality_gap(A, y, a, cfg))
+        gap = (ksvm_duality_gap_lowrank if opts.approx
+               else ksvm_duality_gap)
+        metric_host = lambda a: float(gap(A_s, y, a, cfg_s))
     else:
         schedule = block_schedule(key, H, m, b)
         metric_name = "rel_residual"
-        metric_host = lambda a: float(krr_rel_residual(A, y, a, cfg))
+        # under approx, cfg_s is linear, so the residual's kernel matvec
+        # contracts algebraically (kmv_slab_free linear branch:
+        # Phi @ (Phi^T alpha)) — already O(m l), no factored twin needed
+        metric_host = lambda a: float(krr_rel_residual(A_s, y, a, cfg_s))
     a0 = jnp.zeros(m, A.dtype)
     want_metric = opts.tol > 0.0 or opts.record
     tol = opts.tol if opts.tol > 0.0 else NO_TOL
 
-    t0 = time.perf_counter()
     history = None
     converged = False
     if opts.layout == "serial":
         P = 1
+        # the training operator (K-SVM: diag(y)-scaled rows — a second
+        # (m, n)/(m, l) buffer) is built ONLY where it is consumed: the
+        # serial slab-free paths.  The shard_map bodies rebuild their
+        # per-rank operators from their own shards, and the
+        # materialized-slab oracle bypasses operators entirely.
+        train_op = None
+        if opts.slab_free:
+            train_op = (rep_op.scale_rows(y) if problem == "ksvm"
+                        else rep_op)
         if not want_metric:
-            alpha = _serial_fast(problem, A, y, a0, schedule, cfg, s,
-                                 opts.slab_free)
+            alpha = _serial_fast(problem, A_s, y, a0, schedule, cfg_s, s,
+                                 opts.slab_free, op=train_op)
             rounds_run = -(-H // s)
         else:
+            kw = ({"lowrank": bool(opts.approx)} if problem == "ksvm"
+                  else {})
             solve = (_ksvm_serial_tol if problem == "ksvm"
                      else _krr_serial_tol)
-            res = solve(A, y, a0, schedule, tol, cfg=cfg, s=s,
+            res = solve(A_s, y, a0, schedule, tol, cfg=cfg_s, s=s,
                         check_every=opts.check_every,
-                        slab_free=opts.slab_free)
+                        slab_free=opts.slab_free, op=train_op, **kw)
             alpha = res.state
             rounds_run = int(res.rounds_run)
             converged = bool(res.converged)
             history = np.asarray(res.metric_hist)[:int(res.checks_run)]
         iters_run = min(rounds_run * s, H)
     else:
+        # the shard_map bodies build their own per-rank operators from
+        # the sharded solve matrix: for low-rank runs A_s IS Phi, so the
+        # 1d layout shards Phi's l columns (and the linear-kernel psum
+        # payload shrinks to the contracted (sb, sb+1) words).
         mesh = _resolve_mesh(opts)
         P = (mesh.shape["model"] if opts.layout == "1d"
              else mesh.shape["data"] * mesh.shape["model"])
         alpha = a0
         dist_kw = dict(problem=problem, layout=opts.layout, mesh=mesh,
-                       cfg=cfg, s=s, slab_free=opts.slab_free)
+                       cfg=cfg_s, s=s, slab_free=opts.slab_free)
         if not want_metric:
-            alpha = _dist_chunk(A, y, alpha, schedule, **dist_kw)
+            alpha = _dist_chunk(A_s, y, alpha, schedule, **dist_kw)
             rounds_run, iters_run = -(-H // s), H
         else:
             # chunked early stopping: whole multiples of s per chunk keep
@@ -281,7 +384,7 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions) -> FitResult:
             pos, rounds_run, hist = 0, 0, []
             while pos < H:
                 sched_c = schedule[pos:pos + chunk]
-                alpha = _dist_chunk(A, y, alpha, sched_c, **dist_kw)
+                alpha = _dist_chunk(A_s, y, alpha, sched_c, **dist_kw)
                 pos += sched_c.shape[0]
                 rounds_run += -(-sched_c.shape[0] // s)
                 val = metric_host(alpha)
@@ -294,13 +397,18 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions) -> FitResult:
     jax.block_until_ready(alpha)
     wall = time.perf_counter() - t0
 
+    l = A_s.shape[1] if opts.approx else 0
     comm = modeled_fit_cost(m, n, cfg.kernel.name, b=b, s=s,
-                            iters=iters_run, P=P)
-    return FitResult(alpha=alpha, schedule=schedule[:iters_run],
-                     history=history, metric=metric_name,
-                     converged=converged,
-                     rounds_run=rounds_run, iters_run=iters_run,
-                     wall_time_s=wall, comm=comm, options=opts)
+                            iters=iters_run, P=P, approx=opts.approx,
+                            landmarks=l)
+    rep_name = f"nystrom(l={l})" if opts.approx else "exact"
+    result = FitResult(alpha=alpha, schedule=schedule[:iters_run],
+                       history=history, metric=metric_name,
+                       converged=converged,
+                       rounds_run=rounds_run, iters_run=iters_run,
+                       wall_time_s=wall, comm=comm, options=opts,
+                       representation=rep_name)
+    return result, rep_op
 
 
 class KernelSVM:
@@ -308,22 +416,36 @@ class KernelSVM:
 
     Estimator facade over ``core.dcd`` / ``core.sstep_dcd`` and their
     shard_map layouts; see module docstring and ``SolverOptions``.
+
+    ``fit`` builds the kernel representation (a ``GramOperator``: exact
+    or Nystrom low-rank per ``options.approx``) ONCE and keeps it on
+    ``op_``; ``decision_function``/``predict`` serve through the same
+    operator with the batched slab-free subsystem (``core/predict.py``),
+    after compacting the model to its support vectors.
     """
 
     def __init__(self, C: float = 1.0, loss: str = "l1",
                  kernel: Union[str, KernelConfig, None] = None,
-                 options: Optional[SolverOptions] = None):
+                 options: Optional[SolverOptions] = None,
+                 predict_batch: int = 1024):
         self.cfg = SVMConfig(C=C, loss=loss, kernel=_as_kernel(kernel))
         self.options = options or SolverOptions()
+        self.predict_batch = _check_predict_batch(predict_batch)
 
     def fit(self, A, y) -> FitResult:
-        result = _fit("ksvm", A, y, self.cfg, self.options)
+        result, op = _fit("ksvm", A, y, self.cfg, self.options)
         self.A_, self.y_, self.alpha_ = A, y, result.alpha
+        self.op_ = op
         self.result_ = result
+        self._predictor = None
         return result
 
     def decision_function(self, A_test):
-        return ksvm_predict(self.A_, self.y_, self.alpha_, A_test, self.cfg)
+        if self._predictor is None:
+            self._predictor = BatchedPredictor(
+                self.op_, self.alpha_ * self.y_,
+                batch=self.predict_batch, compact=True)
+        return self._predictor(A_test)
 
     def predict(self, A_test):
         return jnp.sign(self.decision_function(A_test))
@@ -334,19 +456,30 @@ class KernelRidge:
     Descent.  Estimator facade over ``core.bdcd`` / ``core.sstep_bdcd``
     and their shard_map layouts; see module docstring and
     ``SolverOptions``.
+
+    Like ``KernelSVM``, ``fit`` builds the representation operator once
+    (``op_``) and ``predict`` serves through it batched and slab-free.
     """
 
     def __init__(self, lam: float = 1.0,
                  kernel: Union[str, KernelConfig, None] = None,
-                 options: Optional[SolverOptions] = None):
+                 options: Optional[SolverOptions] = None,
+                 predict_batch: int = 1024):
         self.cfg = KRRConfig(lam=lam, kernel=_as_kernel(kernel))
         self.options = options or SolverOptions()
+        self.predict_batch = _check_predict_batch(predict_batch)
 
     def fit(self, A, y) -> FitResult:
-        result = _fit("krr", A, y, self.cfg, self.options)
+        result, op = _fit("krr", A, y, self.cfg, self.options)
         self.A_, self.alpha_ = A, result.alpha
+        self.op_ = op
         self.result_ = result
+        self._predictor = None
         return result
 
     def predict(self, A_test):
-        return krr_predict(self.A_, self.alpha_, A_test, self.cfg)
+        if self._predictor is None:
+            self._predictor = BatchedPredictor(
+                self.op_, self.alpha_, batch=self.predict_batch,
+                scale=1.0 / self.cfg.lam)
+        return self._predictor(A_test)

@@ -28,7 +28,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .kernels import GramOperator, KernelConfig
+from .kernels import ExactGramOperator, KernelConfig
 from .loop import run_rounds
 
 
@@ -51,15 +51,19 @@ def block_schedule(key: jax.Array, H: int, m: int, b: int) -> jnp.ndarray:
 
 def make_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
                        gram_fn: Optional[Callable] = None,
-                       op_factory: Optional[Callable] = None) -> Callable:
+                       op_factory: Optional[Callable] = None,
+                       op=None) -> Callable:
     """``round_fn(alpha, idx) -> alpha`` for ``loop.run_rounds``: one
-    Algorithm-3 exact b x b block solve."""
-    if gram_fn is not None and op_factory is not None:
-        raise ValueError("pass either gram_fn (materialized slab) or "
-                         "op_factory (slab-free operator), not both")
+    Algorithm-3 exact b x b block solve.  ``op`` injects a prebuilt
+    ``GramOperator`` (exact or low-rank) over the training
+    representation; the facade builds it once per fit (DESIGN.md §9)."""
+    if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
+        raise ValueError("pass at most one of gram_fn (materialized "
+                         "slab), op_factory, or op (prebuilt operator)")
     m = A.shape[0]
     inv_lam = 1.0 / cfg.lam
-    op = None if gram_fn else (op_factory or GramOperator)(A, cfg.kernel)
+    if op is None and gram_fn is None:
+        op = (op_factory or ExactGramOperator)(A, cfg.kernel)
 
     def round_fn(alpha, idx):                 # idx: (b,)
         b = idx.shape[0]
@@ -84,10 +88,12 @@ def bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
              record_every: int = 0,
              gram_fn: Optional[Callable] = None,
              op_factory: Optional[Callable] = None,
+             op=None,
              ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    """Run Algorithm 3 for H = schedule.shape[0] iterations."""
+    """Run Algorithm 3 for H = schedule.shape[0] iterations.  ``op``
+    injects a prebuilt operator (pytree, crosses jit as data)."""
     round_fn = make_bdcd_round_fn(A, y, cfg, gram_fn=gram_fn,
-                                  op_factory=op_factory)
+                                  op_factory=op_factory, op=op)
     res = run_rounds(round_fn, alpha0, schedule,
                      record_state=bool(record_every))
     if record_every:

@@ -30,7 +30,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .kernels import GramOperator, KernelConfig
+from .kernels import ExactGramOperator, KernelConfig
 from .loop import run_rounds
 
 L1 = "l1"
@@ -77,16 +77,24 @@ def _dcd_theta(alpha_i, g, eta, nu):
 
 def make_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
                       gram_fn: Optional[Callable] = None,
-                      op_factory: Optional[Callable] = None) -> Callable:
+                      op_factory: Optional[Callable] = None,
+                      op=None) -> Callable:
     """``round_fn(alpha, i) -> alpha`` for ``loop.run_rounds``: one
     Algorithm-1 coordinate step.  This closure IS the classical solver;
-    ``dcd_ksvm`` and the ``repro.api`` facade both drive it."""
-    if gram_fn is not None and op_factory is not None:
-        raise ValueError("pass either gram_fn (materialized slab) or "
-                         "op_factory (slab-free operator), not both")
+    ``dcd_ksvm`` and the ``repro.api`` facade both drive it.
+
+    ``op`` injects a prebuilt ``GramOperator`` over the TRAINING
+    representation (already row-scaled by ``diag(y)`` — use
+    ``operator.scale_rows(y)``); the facade builds it once per fit and
+    reuses it for prediction (DESIGN.md §9).
+    """
+    if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
+        raise ValueError("pass at most one of gram_fn (materialized "
+                         "slab), op_factory, or op (prebuilt operator)")
     Atil = y[:, None] * A                       # diag(y) @ A
     nu, omega = cfg.nu, cfg.omega
-    op = None if gram_fn else (op_factory or GramOperator)(Atil, cfg.kernel)
+    if op is None and gram_fn is None:
+        op = (op_factory or ExactGramOperator)(Atil, cfg.kernel)
 
     def round_fn(alpha, i):
         idx = i[None]
@@ -111,14 +119,17 @@ def dcd_ksvm(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
              record_every: int = 0,
              gram_fn: Optional[Callable] = None,
              op_factory: Optional[Callable] = None,
+             op=None,
              ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Run Algorithm 1 for ``H = len(schedule)`` iterations.
 
     Returns ``(alpha_H, history)`` where ``history`` stacks ``alpha`` every
-    ``record_every`` iterations (or ``None`` when 0).
+    ``record_every`` iterations (or ``None`` when 0).  ``op`` (a pytree —
+    it crosses the jit boundary as data) injects a prebuilt, already
+    row-scaled training operator; see ``make_dcd_round_fn``.
     """
     round_fn = make_dcd_round_fn(A, y, cfg, gram_fn=gram_fn,
-                                 op_factory=op_factory)
+                                 op_factory=op_factory, op=op)
     res = run_rounds(round_fn, alpha0, schedule,
                      record_state=bool(record_every))
     if record_every:

@@ -155,12 +155,20 @@ def _psummed_row_sqnorms(A_loc, cfg: KernelConfig, axis_name: str):
 
 def dist_sstep_dcd_ksvm(mesh: Mesh, A, y, alpha0, schedule,
                         cfg: SVMConfig, s: int, axis_name: str = "model",
-                        slab_free: bool = True):
+                        slab_free: bool = True, op_factory=None):
     """s-step DCD for K-SVM with A in 1D-column layout over ``axis_name``.
 
     A may be passed as a global array; it is sharded on features by the
     in_spec.  Returns the replicated final alpha.  ``slab_free=False``
     selects the legacy materialized-slab all-reduce path (parity oracle).
+
+    ``op_factory(Atil_loc, kernel_cfg)`` injects a custom per-rank
+    ``GramOperator`` built from the LOCAL (already diag(y)-scaled) column
+    shard — the representation seam of DESIGN.md §9.  For the low-rank
+    representation no custom factory is needed: pass ``A = Phi`` with a
+    linear kernel config and the default operator reduces only the
+    contracted ``(sb, sb+1)``-word round quantities (Phi's l columns are
+    what gets sharded, not the raw features).
     """
     spec_A = P(None, axis_name)
 
@@ -170,10 +178,12 @@ def dist_sstep_dcd_ksvm(mesh: Mesh, A, y, alpha0, schedule,
     def run(A_loc, y_r, a0_r, sched_r):
         Atil_loc = y_r[:, None] * A_loc
         rs = _psummed_row_sqnorms(Atil_loc, cfg.kernel, axis_name)
-        if slab_free:
-            def op_factory(Atil, kcfg):
-                return AllreduceGramOperator(axis_name, Atil, kcfg, rs)
+        if op_factory is not None:
             kw = {"op_factory": op_factory}
+        elif slab_free:
+            def default_factory(Atil, kcfg):
+                return AllreduceGramOperator(axis_name, Atil, kcfg, rs)
+            kw = {"op_factory": default_factory}
         else:
             kw = {"gram_fn": make_allreduce_gram(axis_name, row_sqnorms=rs)}
         # pass A_loc (sstep solver re-applies diag(y), idempotent w/ ones)
@@ -195,17 +205,22 @@ def dist_dcd_ksvm(mesh: Mesh, A, y, alpha0, schedule,
 
 def dist_sstep_bdcd_krr(mesh: Mesh, A, y, alpha0, schedule,
                         cfg: KRRConfig, s: int, axis_name: str = "model",
-                        slab_free: bool = True):
-    """s-step BDCD for K-RR, 1D-column layout."""
+                        slab_free: bool = True, op_factory=None):
+    """s-step BDCD for K-RR, 1D-column layout.  ``op_factory(A_loc,
+    kernel_cfg)`` injects a custom per-rank operator (see
+    ``dist_sstep_dcd_ksvm``); low-rank runs pass ``A = Phi`` + linear
+    config and keep the default."""
     @partial(shard_map, mesh=mesh,
              in_specs=(P(None, axis_name), P(), P(), P()), out_specs=P(),
              check_vma=False)
     def run(A_loc, y_r, a0_r, sched_r):
         rs = _psummed_row_sqnorms(A_loc, cfg.kernel, axis_name)
-        if slab_free:
-            def op_factory(A_, kcfg):
-                return AllreduceGramOperator(axis_name, A_, kcfg, rs)
+        if op_factory is not None:
             kw = {"op_factory": op_factory}
+        elif slab_free:
+            def default_factory(A_, kcfg):
+                return AllreduceGramOperator(axis_name, A_, kcfg, rs)
+            kw = {"op_factory": default_factory}
         else:
             kw = {"gram_fn": make_allreduce_gram(axis_name, row_sqnorms=rs)}
         out, _ = sstep_bdcd_krr(A_loc, y_r, a0_r, sched_r, cfg, s, **kw)
@@ -236,35 +251,58 @@ def _gather_rows_onehot(flat, row0, m_loc, dtype):
         dtype)
 
 
-def _2d_round_gram(A_loc, flat, rs_loc, kernel, data_axis, model_axis,
-                   row0, m_loc):
-    """Collectives (1)+(2) of the 2D round: gather the sampled rows over
-    ``data``, then one ``model`` psum reducing the row-local dot block
-    with the sb x sb cross-dots riding the same collective.  Returns
-    (onehot, Q_loc, Gblk) — the epilogued row-local slab tile and the
-    replicated sampled cross block."""
-    onehot = _gather_rows_onehot(flat, row0, m_loc, A_loc.dtype)
-    B_loc = jax.lax.psum(onehot @ A_loc, data_axis)       # (sb, n_loc)
-    sb = flat.shape[0]
-    packed = jax.lax.psum(jnp.concatenate(
-        [A_loc @ B_loc.T,                                 # (m_loc, sb)
-         B_loc @ B_loc.T], axis=0), model_axis)
-    dots, cross = packed[:m_loc], packed[m_loc:]
-    assert cross.shape[0] == sb
-    if kernel.name == RBF:
-        cs = jnp.diagonal(cross)                          # ||b_j||^2 free
-        Q_loc = apply_epilogue(dots, kernel, rs_loc, cs)
-        Gblk = apply_epilogue(cross, kernel, cs, cs)
-    else:
-        Q_loc = apply_epilogue(dots, kernel)
-        Gblk = apply_epilogue(cross, kernel)
-    return onehot, Q_loc, Gblk
+class Sharded2dGramOperator:
+    """Per-rank slab-free gram operator for the 2D (samples x features)
+    layout — the 2D twin of ``AllreduceGramOperator`` in the operator
+    hierarchy (DESIGN.md §9).  Both 2D solver bodies consume ONLY
+    ``round_parts``, so a different representation (e.g. a row-sharded
+    low-rank factor: pass ``A = Phi`` with a linear kernel config, Phi's
+    l columns sharded over ``model``) drops in without touching the
+    solver math.
+
+    ``round_parts(flat)`` executes collectives (1)+(2) of the 2D round:
+    gather the sampled rows over ``data``, then one ``model`` psum
+    reducing the row-local dot block with the sb x sb cross-dots riding
+    the same collective.  Returns (onehot, Q_loc, Gblk) — the one-hot
+    row selector, the epilogued row-local slab tile, and the replicated
+    sampled cross block.
+    """
+
+    def __init__(self, A_loc, kernel: KernelConfig, *, data_axis: str,
+                 model_axis: str, row0, m_loc: int, row_sqnorms=None):
+        self.A_loc = A_loc
+        self.kernel = kernel
+        self.data_axis = data_axis
+        self.model_axis = model_axis
+        self.row0 = row0
+        self.m_loc = m_loc
+        self.rs_loc = row_sqnorms
+
+    def round_parts(self, flat):
+        A_loc, kernel, m_loc = self.A_loc, self.kernel, self.m_loc
+        onehot = _gather_rows_onehot(flat, self.row0, m_loc, A_loc.dtype)
+        B_loc = jax.lax.psum(onehot @ A_loc, self.data_axis)  # (sb, n_loc)
+        sb = flat.shape[0]
+        packed = jax.lax.psum(jnp.concatenate(
+            [A_loc @ B_loc.T,                             # (m_loc, sb)
+             B_loc @ B_loc.T], axis=0), self.model_axis)
+        dots, cross = packed[:m_loc], packed[m_loc:]
+        assert cross.shape[0] == sb
+        if kernel.name == RBF:
+            cs = jnp.diagonal(cross)                      # ||b_j||^2 free
+            Q_loc = apply_epilogue(dots, kernel, self.rs_loc, cs)
+            Gblk = apply_epilogue(cross, kernel, cs, cs)
+        else:
+            Q_loc = apply_epilogue(dots, kernel)
+            Gblk = apply_epilogue(cross, kernel)
+        return onehot, Q_loc, Gblk
 
 
 def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
                            cfg: KRRConfig, s: int,
                            data_axis: str = "data",
-                           model_axis: str = "model"):
+                           model_axis: str = "model",
+                           op_factory=None):
     """2D-partitioned s-step BDCD: A[m/Pd, n/Pm] per device, alpha sharded
     over ``data``.  Slab-free: the row-local slab tile is epilogued and
     contracted in one shot; only contracted quantities cross the wires.
@@ -284,7 +322,9 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
     are loop-invariant and hoisted out of the round loop entirely.
 
     Ragged H (H % s != 0) runs a masked final short round, exactly as the
-    serial solvers do (loop.pad_rounds).
+    serial solvers do (loop.pad_rounds).  ``op_factory`` overrides the
+    per-rank ``Sharded2dGramOperator`` (same constructor signature) —
+    the representation seam of DESIGN.md §9.
     """
     m = A.shape[0]
     pd = mesh.shape[data_axis]
@@ -303,13 +343,14 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
         row0 = my_d * m_loc
         # loop-invariant RBF row norms for the locally-owned samples
         rs_loc = _psummed_row_sqnorms(A_loc, cfg.kernel, model_axis)
+        op = (op_factory or Sharded2dGramOperator)(
+            A_loc, cfg.kernel, data_axis=data_axis, model_axis=model_axis,
+            row0=row0, m_loc=m_loc, row_sqnorms=rs_loc)
 
         def round_fn(alpha_loc, xs):                  # idx: (s, b) global
             idx, valid = xs
             flat = idx.reshape(s * b)
-            onehot, Q_loc, Gblk = _2d_round_gram(
-                A_loc, flat, rs_loc, cfg.kernel, data_axis, model_axis,
-                row0, m_loc)
+            onehot, Q_loc, Gblk = op.round_parts(flat)
             # (3) contract the slab tile IMMEDIATELY (it never leaves this
             #     scope) and fuse every data-axis cross term into ONE psum.
             packed = jnp.concatenate([
@@ -337,7 +378,8 @@ def dist_sstep_bdcd_krr_2d(mesh: Mesh, A, y, alpha0, schedule,
 def dist_sstep_dcd_ksvm_2d(mesh: Mesh, A, y, alpha0, schedule,
                            cfg: SVMConfig, s: int,
                            data_axis: str = "data",
-                           model_axis: str = "model"):
+                           model_axis: str = "model",
+                           op_factory=None):
     """2D-partitioned s-step DCD for K-SVM: Atil[m/Pd, n/Pm] per device,
     alpha and y sharded over ``data``.  Same collective schedule as the
     2D BDCD solver (rows gather -> fused model psum -> fused data psum of
@@ -359,12 +401,14 @@ def dist_sstep_dcd_ksvm_2d(mesh: Mesh, A, y, alpha0, schedule,
         row0 = my_d * m_loc
         Atil_loc = y_loc[:, None] * A_loc
         rs_loc = _psummed_row_sqnorms(Atil_loc, cfg.kernel, model_axis)
+        op = (op_factory or Sharded2dGramOperator)(
+            Atil_loc, cfg.kernel, data_axis=data_axis,
+            model_axis=model_axis, row0=row0, m_loc=m_loc,
+            row_sqnorms=rs_loc)
 
         def round_fn(alpha_loc, xs):                  # idx: (s,) global
             idx, valid = xs
-            onehot, U_loc, G0 = _2d_round_gram(
-                Atil_loc, idx, rs_loc, cfg.kernel, data_axis, model_axis,
-                row0, m_loc)
+            onehot, U_loc, G0 = op.round_parts(idx)
             packed = jax.lax.psum(jnp.concatenate([
                 (U_loc.T @ alpha_loc)[:, None],        # (s, 1)
                 (onehot @ alpha_loc)[:, None],         # (s, 1)

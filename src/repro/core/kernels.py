@@ -1,10 +1,17 @@
-"""Kernel functions (paper Table 1) and gram-slab computation.
+"""Kernel functions (paper Table 1), gram-slab computation, and the
+``GramOperator`` representation hierarchy (DESIGN.md §2/§9).
 
 The paper's hot spot is ``K(A, Omega_k^T A)`` — an ``m x (s*b)`` slab of the
 full ``m x m`` kernel matrix.  On TPU this is a GEMM (MXU) followed by a
 pointwise epilogue (VPU).  ``gram_slab`` below is the pure-jnp reference
 path; the Pallas fused kernel lives in ``repro.kernels.gram`` and is
 numerically validated against this implementation.
+
+Solvers and the predict subsystem never consume slabs directly: they go
+through a ``GramOperator`` — ``ExactGramOperator`` (raw features +
+kernel config, KMV-streamed) or ``LowRankGramOperator`` (Nystrom/feature
+factor ``Phi``, every reduction O(l)-wide) — so the kernel
+*representation* swaps without touching solver or serving math.
 """
 from __future__ import annotations
 
@@ -136,13 +143,14 @@ def kmv_slab_free(A: jnp.ndarray, B: jnp.ndarray, X: jnp.ndarray,
     return out[:, 0] if vec else out
 
 
-@dataclasses.dataclass(frozen=True)
 class GramOperator:
-    """Implicit gram-slab operator: slab-free access to ``U = K(A, A[idx])``.
+    """Abstract kernel *representation*: slab-free access to the gram
+    matrix ``K`` of a fixed training set (DESIGN.md §9).
 
-    Every solver in ``repro.core`` consumes the ``m x (s*b)`` slab through
-    exactly three reductions, so exposing only those lets backends (fused
-    Pallas KMV, shard_map all-reduce) never materialize ``U`` in HBM:
+    Every solver in ``repro.core`` consumes the ``m x (s*b)`` slab
+    ``U = K(A, A[idx])`` through exactly three reductions, so exposing only
+    those lets backends (fused Pallas KMV, shard_map all-reduce, low-rank
+    feature maps) never materialize ``U`` in HBM:
 
       ``matvec(idx, X)``    -> ``U^T X``            (s*b,) or (s*b, c)
       ``cross_block(idx)``  -> ``U[idx, :]``        (s*b, s*b) sampled gram
@@ -152,9 +160,71 @@ class GramOperator:
     needs of the s-step solvers — so distributed implementations can fuse
     both into one collective (see ``core.distributed``).
 
-    ``matvec_impl(A, B, X, cfg)`` overrides the contraction backend, e.g.
-    with ``repro.kernels.kmv.kmv_pallas`` via ``kernels.ops``.
+    The serving surface (``core/predict.py``) adds two more reductions:
+
+      ``serve_weights(w)``     -> representation-side precompute of the
+                                  model weights (identity for exact,
+                                  ``Phi^T w`` — (l,) words — for low-rank)
+      ``serve_block(Xq, sw)``  -> ``K(Xq, train) @ w`` for one query block
+
+    plus ``scale_rows(y)`` (the solvers' ``diag(y)`` data scaling) and
+    ``take(idx)`` (support-vector compaction), both returning a NEW
+    operator over the transformed representation.
+
+    Concrete backends: ``ExactGramOperator`` (raw features + kernel
+    config), ``LowRankGramOperator`` (Nystrom/feature-map factor ``Phi``),
+    and ``core.distributed.AllreduceGramOperator`` (1D shard_map psum
+    fusion, round_data only).  All are registered jax pytrees, so a
+    prebuilt operator can cross ``jit`` boundaries as a plain argument.
     """
+
+    def __init__(self, *args, **kwargs):
+        raise TypeError(
+            "GramOperator is the abstract representation interface "
+            "(DESIGN.md §9); construct a concrete backend instead — "
+            "ExactGramOperator(A, cfg, ...) is the former concrete "
+            "GramOperator")
+
+    def rows(self, idx: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def matvec(self, idx: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def cross_block(self, idx: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def diag(self, idx: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    @property
+    def n_samples(self) -> int:
+        raise NotImplementedError
+
+    def scale_rows(self, y: jnp.ndarray) -> "GramOperator":
+        raise NotImplementedError
+
+    def take(self, idx) -> "GramOperator":
+        raise NotImplementedError
+
+    def serve_weights(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Representation-side precompute for serving (default: identity)."""
+        return w
+
+    def serve_block(self, Xq: jnp.ndarray, sw: jnp.ndarray) -> jnp.ndarray:
+        """``K(Xq, train) @ w`` for one (q, n) query block, slab-free."""
+        raise NotImplementedError
+
+    def round_data(self, idx: jnp.ndarray, X: jnp.ndarray):
+        """(cross_block, matvec) for one s-step round."""
+        return self.cross_block(idx), self.matvec(idx, X)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactGramOperator(GramOperator):
+    """Exact-kernel representation: raw features + kernel config; the
+    reductions stream the slab through ``kmv_slab_free`` (or a Pallas KMV
+    backend via ``matvec_impl(A, B, X, cfg)``, see ``kernels.ops``)."""
 
     A: jnp.ndarray
     cfg: KernelConfig
@@ -177,6 +247,96 @@ class GramOperator:
     def diag(self, idx: jnp.ndarray) -> jnp.ndarray:
         return kernel_diag(self.A[idx], self.cfg)
 
-    def round_data(self, idx: jnp.ndarray, X: jnp.ndarray):
-        """(cross_block, matvec) for one s-step round."""
-        return self.cross_block(idx), self.matvec(idx, X)
+    @property
+    def n_samples(self) -> int:
+        return self.A.shape[0]
+
+    def scale_rows(self, y: jnp.ndarray) -> "ExactGramOperator":
+        """Operator over ``diag(y) A`` — the solvers' K-SVM data scaling
+        (the paper implementation's convention, preserved verbatim).
+        NOTE: for nonlinear kernels ``K(diag(y) A)`` is NOT
+        ``diag(y) K diag(y)`` — see ``LowRankGramOperator.scale_rows``
+        for the semantic consequence."""
+        return dataclasses.replace(self, A=y[:, None] * self.A)
+
+    def take(self, idx) -> "ExactGramOperator":
+        return dataclasses.replace(self, A=self.A[idx])
+
+    def serve_block(self, Xq: jnp.ndarray, sw: jnp.ndarray) -> jnp.ndarray:
+        # K(A, Xq)^T sw == K(Xq, A) @ sw: one KMV with the queries as the
+        # sampled rows — slab-free over the (large) training dimension.
+        if self.matvec_impl is not None:
+            return self.matvec_impl(self.A, Xq, sw, self.cfg)
+        return kmv_slab_free(self.A, Xq, sw, self.cfg, block=self.block)
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankGramOperator(GramOperator):
+    """Low-rank representation ``K ~= Phi Phi^T`` (Nystrom, random
+    features, ...): every reduction is an O(l)-width *linear*-kernel
+    contraction over the factor ``Phi in R^{m x l}`` — the slab, the
+    cross block, and the diagonal never touch the raw features or the
+    nonlinear epilogue again.
+
+    ``fmap`` (optional, e.g. ``nystrom.NystromMap``) maps NEW points into
+    the same feature space; it is required only by the serving surface
+    (``serve_block``), not by training.
+    """
+
+    Phi: jnp.ndarray
+    fmap: Optional[object] = None
+
+    def rows(self, idx: jnp.ndarray) -> jnp.ndarray:
+        return self.Phi[idx]
+
+    def matvec(self, idx: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+        return self.Phi[idx] @ (self.Phi.T @ X)
+
+    def cross_block(self, idx: jnp.ndarray) -> jnp.ndarray:
+        R = self.Phi[idx]
+        return R @ R.T
+
+    def diag(self, idx: jnp.ndarray) -> jnp.ndarray:
+        R = self.Phi[idx]
+        return jnp.sum(R * R, axis=1)
+
+    @property
+    def n_samples(self) -> int:
+        return self.Phi.shape[0]
+
+    @property
+    def rank(self) -> int:
+        return self.Phi.shape[1]
+
+    def scale_rows(self, y: jnp.ndarray) -> "LowRankGramOperator":
+        """``diag(y) K~ diag(y) == (diag(y) Phi)(diag(y) Phi)^T``
+        exactly — the textbook K-SVM dual scaling, consistent with
+        ``objectives._Qbar`` and the serving expansion.  This differs
+        from the exact path's ``K(diag(y) A)`` convention for NONLINEAR
+        kernels (where feature scaling does not commute with the
+        epilogue), so exact vs low-rank K-SVM solutions are directly
+        comparable only for the linear kernel; each path is internally
+        consistent (training dual == stopping metric == serving)."""
+        return dataclasses.replace(self, Phi=y[:, None] * self.Phi)
+
+    def take(self, idx) -> "LowRankGramOperator":
+        return dataclasses.replace(self, Phi=self.Phi[idx])
+
+    def serve_weights(self, w: jnp.ndarray) -> jnp.ndarray:
+        return self.Phi.T @ w                     # (l,) — the whole model
+
+    def serve_block(self, Xq: jnp.ndarray, sw: jnp.ndarray) -> jnp.ndarray:
+        if self.fmap is None:
+            raise ValueError(
+                "LowRankGramOperator has no feature map (fmap=None): "
+                "serving new points needs one — build the operator via "
+                "repro.core.nystrom.fit_nystrom / the repro.api facade "
+                "(SolverOptions(approx='nystrom'))")
+        return self.fmap(Xq) @ sw                 # O(l) per query
+
+
+jax.tree_util.register_dataclass(
+    ExactGramOperator, data_fields=("A",),
+    meta_fields=("cfg", "matvec_impl", "block"))
+jax.tree_util.register_dataclass(
+    LowRankGramOperator, data_fields=("Phi", "fmap"), meta_fields=())

@@ -19,6 +19,11 @@ mask rides along, so the final short round computes masked (zero)
 updates for the padded slots — the iterates match the classical solver
 at every ragged H (tests/test_api.py::TestRaggedTail).
 
+The round_fns driven here are representation-agnostic: they read kernel
+data only through a ``GramOperator`` (exact, low-rank, or a distributed
+all-reduce operator — DESIGN.md §9), injected per fit via the
+factories' ``op``/``op_factory`` parameters.
+
 Everything here is pure ``lax``; the driver runs identically inside
 ``jax.jit`` and inside ``shard_map`` bodies (core/distributed.py).
 """

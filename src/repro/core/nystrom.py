@@ -4,23 +4,59 @@ by approximating the sampled kernel matrix (for example using the Nystrom
 method)", Conclusion).
 
 K is approximated with l landmark rows:  K ~= Phi Phi^T  where
-Phi = K(., L) K_LL^{-1/2} in R^{m x l}.  Because our DCD/BDCD solvers take
-an arbitrary ``gram_fn``, Nystrom-BDCD is simply the LINEAR-kernel solver
-on the feature map Phi — the per-round slab cost drops from
+Phi = K(., L) K_LL^{-1/2} in R^{m x l}.  Because our DCD/BDCD solvers
+consume kernels only through a ``GramOperator``, Nystrom-(B)DCD is the
+LINEAR-kernel reduction over the factor Phi — packaged as
+``kernels.LowRankGramOperator`` — so the per-round slab cost drops from
 O(s*b*f*m*n / P) to O(s*b*m*l / P) flops and the stored dataset from
 fmn/P to ml/P words, at the accuracy cost bounded by the kernel's
-spectral tail (rank-l approximation error).
+spectral tail (rank-l approximation error, ``nystrom_kernel_error``).
+
+Prefer the ``repro.api`` facade over hand-wiring this module:
+``SolverOptions(approx="nystrom", landmarks=l)`` builds the feature map
+and the ``LowRankGramOperator`` once, fits through it on any layout, and
+serves predictions through the same operator (``core/predict.py``,
+DESIGN.md §9).  The functions below are the building blocks the facade —
+and the parity tests — compose.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .bdcd import KRRConfig
-from .kernels import KernelConfig, gram_slab
+from .kernels import KernelConfig, LowRankGramOperator, gram_slab
+
+LANDMARK_METHODS = ("uniform", "kmeans")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NystromMap:
+    """Fitted Nystrom feature map ``phi(x) = K(x, L) @ K_LL^{-1/2}``.
+
+    A registered pytree (landmarks + transform are data, the kernel
+    config is static), so it can ride inside a ``LowRankGramOperator``
+    across jit boundaries — the serving path maps query blocks with it.
+    """
+
+    landmarks: jnp.ndarray                 # (l, n)
+    transform: jnp.ndarray                 # (l, l) = K_LL^{-1/2}
+    kernel: KernelConfig = dataclasses.field(
+        default_factory=KernelConfig,
+        metadata=dict(static=True))
+
+    def __call__(self, X: jnp.ndarray) -> jnp.ndarray:
+        """phi(X): (q, n) -> (q, l)."""
+        return gram_slab(X, self.landmarks, self.kernel) @ self.transform
+
+    @property
+    def rank(self) -> int:
+        return self.landmarks.shape[0]
 
 
 @partial(jax.jit, static_argnames=("cfg", "jitter"))
@@ -29,18 +65,91 @@ def nystrom_map(A: jnp.ndarray, landmarks: jnp.ndarray,
     """Phi = K(A, L) @ K_LL^{-1/2}  (symmetric inverse square root via
     eigendecomposition, eigenvalue-floored for stability)."""
     K_al = gram_slab(A, landmarks, cfg)               # (m, l)
+    return K_al @ _inv_sqrt_gram(landmarks, cfg, jitter)
+
+
+def _inv_sqrt_gram(landmarks: jnp.ndarray, cfg: KernelConfig,
+                   jitter: float) -> jnp.ndarray:
     K_ll = gram_slab(landmarks, landmarks, cfg)       # (l, l)
     w, V = jnp.linalg.eigh(K_ll)
     w = jnp.maximum(w, jitter)
-    inv_sqrt = (V * (w ** -0.5)) @ V.T
-    return K_al @ inv_sqrt
+    return (V * (w ** -0.5)) @ V.T
 
 
-def choose_landmarks(key, A: jnp.ndarray, l: int) -> jnp.ndarray:
-    """Uniform landmark sampling (paper-adjacent baseline; leverage-score
-    sampling is a further refinement)."""
+def kmeans_landmarks(key, A: jnp.ndarray, l: int,
+                     iters: int = 10) -> jnp.ndarray:
+    """Lloyd's-algorithm landmarks (fixed iteration count, pure lax):
+    cluster centroids cover the data manifold far better than uniform
+    draws when the data is clustered, which is exactly when the kernel
+    spectrum decays fast and Nystrom shines (Zhang & Kwok, 2008).
+
+    Initialization is farthest-first traversal (the deterministic
+    kmeans++ variant): uniform seeding routinely drops whole clusters —
+    duplicated seeds merge and the empty-cluster rule keeps them stale —
+    which costs O(sqrt(cluster mass / total)) in kernel error per miss.
+    """
+    m = A.shape[0]
+    a_sq = jnp.sum(A * A, axis=1)                     # loop-invariant
+
+    def _sq_dist_to(c):
+        return jnp.maximum(a_sq + jnp.sum(c * c) - 2.0 * A @ c, 0.0)
+
+    def seed(carry, _):
+        centers, mind, k = carry
+        nxt = A[jnp.argmax(mind)]
+        centers = centers.at[k].set(nxt)
+        return (centers, jnp.minimum(mind, _sq_dist_to(nxt)), k + 1), None
+
+    first = A[jax.random.randint(key, (), 0, m)]
+    init0 = jnp.zeros((l, A.shape[1]), A.dtype).at[0].set(first)
+    (init, _, _), _ = jax.lax.scan(
+        seed, (init0, _sq_dist_to(first), 1), None, length=l - 1)
+
+    def step(centers, _):
+        d = (a_sq[:, None] + jnp.sum(centers * centers, axis=1)[None, :]
+             - 2.0 * A @ centers.T)                   # (m, l) sq dists
+        assign = jnp.argmin(d, axis=1)
+        onehot = (assign[:, None] == jnp.arange(l)[None, :]).astype(A.dtype)
+        counts = jnp.sum(onehot, axis=0)              # (l,)
+        sums = onehot.T @ A                           # (l, n)
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts, 1.0)[:, None], centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(step, init, None, length=iters)
+    return centers
+
+
+def choose_landmarks(key, A: jnp.ndarray, l: int,
+                     method: str = "uniform") -> jnp.ndarray:
+    """Landmark selection: ``"uniform"`` row sampling (paper-adjacent
+    baseline) or ``"kmeans"`` centroids (``kmeans_landmarks``);
+    leverage-score sampling is a further refinement."""
+    if method not in LANDMARK_METHODS:
+        raise ValueError(f"landmark method must be one of "
+                         f"{LANDMARK_METHODS}, got {method!r}")
+    if method == "kmeans":
+        return kmeans_landmarks(key, A, l)
     idx = jax.random.choice(key, A.shape[0], (l,), replace=False)
     return A[idx]
+
+
+def fit_nystrom(key, A: jnp.ndarray, cfg: KernelConfig, l: int,
+                method: str = "uniform", jitter: float = 1e-6) -> NystromMap:
+    """Choose landmarks and fit the feature map in one step — the
+    representation build the ``repro.api`` facade performs once per
+    ``fit`` (and reuses at predict time)."""
+    landmarks = choose_landmarks(key, A, l, method=method)
+    return NystromMap(landmarks=landmarks,
+                      transform=_inv_sqrt_gram(landmarks, cfg, jitter),
+                      kernel=cfg)
+
+
+def lowrank_operator(fmap: NystromMap, A: jnp.ndarray
+                     ) -> LowRankGramOperator:
+    """``LowRankGramOperator`` over ``Phi = fmap(A)`` — the pluggable
+    backend the solvers and the predict subsystem consume."""
+    return LowRankGramOperator(Phi=fmap(A), fmap=fmap)
 
 
 def nystrom_kernel_error(A, landmarks, cfg: KernelConfig) -> float:
@@ -50,17 +159,30 @@ def nystrom_kernel_error(A, landmarks, cfg: KernelConfig) -> float:
     return float(jnp.linalg.norm(K - Phi @ Phi.T) / jnp.linalg.norm(K))
 
 
-def nystrom_krr_setup(key, A, cfg: KRRConfig, l: int
-                      ) -> Tuple[jnp.ndarray, KRRConfig]:
-    """Returns (Phi, linear-kernel KRRConfig): run any of the BDCD /
-    s-step BDCD solvers (serial or distributed) on (Phi, y) with the
-    returned config and you are solving K-RR under the Nystrom kernel.
+class NystromKRRSetup(NamedTuple):
+    """Everything ``nystrom_krr_setup`` produced: run any BDCD variant on
+    (Phi, y) with ``cfg``, and keep ``landmarks`` / ``feature_map`` — the
+    predict path needs them to map queries into the same feature space
+    (the old bare (Phi, cfg) tuple lost them)."""
+
+    Phi: jnp.ndarray                       # (m, l) training features
+    cfg: KRRConfig                         # linear-kernel KRR config
+    landmarks: jnp.ndarray                 # (l, n)
+    feature_map: NystromMap
+
+
+def nystrom_krr_setup(key, A, cfg: KRRConfig, l: int,
+                      method: str = "uniform") -> NystromKRRSetup:
+    """Returns ``NystromKRRSetup(Phi, cfg, landmarks, feature_map)``: run
+    any of the BDCD / s-step BDCD solvers (serial or distributed) on
+    (Phi, y) with the returned linear-kernel config and you are solving
+    K-RR under the Nystrom kernel.
 
     The s-step communication structure is untouched — this composes with
     the paper's schedule (the slab GEMM just got cheaper), which is
     exactly the paper's proposed combination.
     """
-    landmarks = choose_landmarks(key, A, l)
-    Phi = nystrom_map(A, landmarks, cfg.kernel)
+    fmap = fit_nystrom(key, A, cfg.kernel, l, method=method)
     lin_cfg = KRRConfig(lam=cfg.lam, kernel=KernelConfig("linear"))
-    return Phi, lin_cfg
+    return NystromKRRSetup(Phi=fmap(A), cfg=lin_cfg,
+                           landmarks=fmap.landmarks, feature_map=fmap)

@@ -60,6 +60,26 @@ def ksvm_duality_gap(A, y, alpha, cfg: SVMConfig):
 
 
 @partial(jax.jit, static_argnames=("cfg",))
+def ksvm_duality_gap_lowrank(Phi, y, alpha, cfg: SVMConfig):
+    """Duality gap under the factored kernel ``K~ = Phi Phi^T`` without
+    ever forming the m x m gram: the shared core ``Qbar alpha`` is the
+    O(m l) contraction ``y * (Phi (Phi^T (y alpha)))`` — the low-rank
+    facade's tolerance stopper (``ksvm_duality_gap`` on a linear kernel
+    over Phi computes the identical value at O(m^2) memory)."""
+    ya = y * alpha
+    Qa = y * (Phi @ (Phi.T @ ya))           # (yy^T Phi Phi^T) alpha
+    Qbar_a = Qa if cfg.loss == L1 else Qa + cfg.omega * alpha
+    dual = 0.5 * alpha @ Qbar_a - jnp.sum(alpha)
+    margins = jnp.maximum(1.0 - Qa, 0.0)
+    if cfg.loss == L1:
+        loss = cfg.C * jnp.sum(margins)
+    else:
+        loss = cfg.C * jnp.sum(margins ** 2)
+    primal = 0.5 * alpha @ Qa + loss
+    return primal + dual
+
+
+@partial(jax.jit, static_argnames=("cfg",))
 def krr_dual_objective(A, y, alpha, cfg: KRRConfig):
     """Paper eq. (2): 1/2 alpha^T ((1/lam) K + m I) alpha - alpha^T y."""
     m = A.shape[0]
@@ -98,7 +118,13 @@ def krr_rel_residual(A, y, alpha, cfg: KRRConfig):
 
 @partial(jax.jit, static_argnames=("cfg",))
 def ksvm_predict(A_train, y_train, alpha, A_test, cfg: SVMConfig):
-    """Decision values f(x) = sum_i alpha_i y_i K(a_i, x)."""
+    """Decision values f(x) = sum_i alpha_i y_i K(a_i, x).
+
+    LEGACY DENSE ORACLE: materializes the full (q x m) test-kernel slab
+    in one GEMM.  Serving goes through ``core/predict.py`` (batched,
+    slab-free, SV-compacted — DESIGN.md §9); this stays as the parity
+    reference ``benchmarks/fig6_predict.py`` and the tests gate against.
+    """
     from .kernels import gram_slab
     Kxt = gram_slab(A_test, A_train, cfg.kernel)     # (mt, m)
     return Kxt @ (alpha * y_train)
@@ -106,7 +132,11 @@ def ksvm_predict(A_train, y_train, alpha, A_test, cfg: SVMConfig):
 
 @partial(jax.jit, static_argnames=("cfg",))
 def krr_predict(A_train, alpha, A_test, cfg: KRRConfig):
-    """K-RR predictions.  With M alpha = y, f(x) = (1/lam) K(x, A) alpha."""
+    """K-RR predictions.  With M alpha = y, f(x) = (1/lam) K(x, A) alpha.
+
+    LEGACY DENSE ORACLE — see ``ksvm_predict``; serving runs through
+    ``core/predict.py`` (DESIGN.md §9).
+    """
     from .kernels import gram_slab
     Kxt = gram_slab(A_test, A_train, cfg.kernel)
     return (Kxt @ alpha) / cfg.lam

@@ -11,6 +11,12 @@ DCD (K-SVM) is the b=1 specialization.  These closed forms power the
 strong-scaling predictions (benchmarks/fig3) that mirror the paper's Cray
 EX experiments, calibrated with machine parameters measured on this host
 (gamma) and standard HPC interconnect constants (beta, phi).
+
+Both kernel *representations* are priced (DESIGN.md §9): exact rounds at
+data width n with the kernel's epilogue cost mu, low-rank (Nystrom)
+rounds at width l with linear-kernel mu plus the one-time
+``lowrank_setup_cost``; ``modeled_predict_cost`` prices serving for both
+(and the SV fraction for compacted K-SVM models).
 """
 from __future__ import annotations
 
@@ -36,9 +42,11 @@ class Problem:
     kernel: str = "rbf"
 
 
-def _mu(mach: Machine, prob: Problem) -> float:
+def _mu(mach: Machine, prob) -> float:
+    """Kernel-epilogue op cost in flop units; accepts a Problem or name."""
+    kernel = prob if isinstance(prob, str) else prob.kernel
     return {"linear": 1.0, "polynomial": mach.mu / 2, "rbf": mach.mu}[
-        prob.kernel]
+        kernel]
 
 
 def bdcd_cost(prob: Problem, mach: Machine, P: int) -> dict:
@@ -83,24 +91,92 @@ def storage_words(prob: Problem, P: int, s: int = 1) -> float:
     return prob.f * prob.m * prob.n / P + s * prob.b * prob.m
 
 
+def lowrank_setup_cost(m: int, n: int, l: int, kernel: str,
+                       mach: Machine = None, P: int = 1) -> dict:
+    """One-time cost of building the rank-l Nystrom representation:
+    the ``K(A, L)`` slab (m*l*n MACs + epilogue), the l x l
+    eigendecomposition (~10 l^3 — LAPACK's classic constant), and the
+    ``m x l x l`` feature-map GEMM.  The m-scaled terms shard over P
+    (rows are embarrassingly parallel); the eigh is redundant per rank.
+    """
+    mach = mach or Machine()
+    mu = _mu(mach, kernel)
+    F = (m * l * n + mu * m * l + m * l * l) / P + 10.0 * l ** 3
+    return {"flops": F, "time": mach.gamma * F}
+
+
 def modeled_fit_cost(m: int, n: int, kernel: str, *, b: int = 1,
                      s: int = 1, iters: int = 1, P: int = 1,
-                     mach: Machine = None) -> dict:
+                     mach: Machine = None, approx: str = None,
+                     landmarks: int = 0) -> dict:
     """Hockney-model cost summary for a completed solver run — the
     ``FitResult.comm`` payload of the ``repro.api`` facade.  ``iters`` is
     the number of INNER iterations actually executed (early stopping
     shrinks it), ``P`` the processor count implied by the layout; ``s=1``
-    prices the classical per-iteration collective schedule."""
+    prices the classical per-iteration collective schedule.
+
+    ``approx="nystrom"`` prices the LOW-RANK representation instead: the
+    per-round slab GEMM runs over the rank-``landmarks`` linear factor
+    Phi (width l, mu = 1 — no nonlinear epilogue in the round loop), the
+    one-time ``lowrank_setup_cost`` is folded into flops/time and
+    reported separately under ``setup_flops``/``setup_time``, and the
+    psum payload is the CONTRACTED ``(s*b, s*b+1)`` words the linear
+    all-reduce operator actually moves per round — not the Theorem-2
+    ``s*b*m`` pre-epilogue payload, which only nonlinear kernels must
+    psum (exact-path pricing keeps the paper's model for fidelity).
+    """
     mach = mach or Machine()
     # price whole communication rounds: a ragged final round (pad-and-
     # mask) still issues a full-size collective, so round iters up to
     # ceil(iters/s) rounds — keeping comm['msgs'] consistent with the
     # FitResult.rounds_run reported for the same run.
     H = max(iters, 1) if s <= 1 else -(-max(iters, 1) // s) * s
-    prob = Problem(m=m, n=n, b=max(b, 1), H=H, kernel=kernel)
+    if approx:
+        prob = Problem(m=m, n=max(landmarks, 1), b=max(b, 1), H=H,
+                       kernel="linear")
+    else:
+        prob = Problem(m=m, n=n, b=max(b, 1), H=H, kernel=kernel)
     cost = (bdcd_cost(prob, mach, P) if s <= 1
             else sstep_bdcd_cost(prob, mach, P, s))
-    return dict(cost, P=P, s=s, iters=iters)
+    cost = dict(cost, P=P, s=s, iters=iters, approx=approx,
+                landmarks=landmarks if approx else 0)
+    if approx:
+        setup = lowrank_setup_cost(m, n, max(landmarks, 1), kernel,
+                                   mach, P)
+        cost["setup_flops"] = setup["flops"]
+        cost["setup_time"] = setup["time"]
+        cost["flops"] += setup["flops"]
+        cost["t_comp"] += setup["time"]
+        # linear-factor rounds psum only the contracted quantities
+        sb = max(s, 1) * max(b, 1)
+        rounds = H if s <= 1 else H / s
+        cost["words"] = rounds * sb * (sb + 1)
+        cost["t_band"] = mach.beta * cost["words"]
+        cost["time"] = cost["t_comp"] + cost["t_band"] + cost["t_lat"]
+    return cost
+
+
+def modeled_predict_cost(m: int, n: int, q: int, kernel: str, *,
+                         approx: str = None, landmarks: int = 0,
+                         sv_fraction: float = 1.0,
+                         mach: Machine = None) -> dict:
+    """Per-batch serving cost (DESIGN.md §9) for ``q`` queries against an
+    ``m``-sample model: exact representations pay the ``q x m_sv`` kernel
+    block (KMV-streamed, never materialized — flops only, zero slab
+    words), low-rank ones pay the O(l)-per-query feature map.  The
+    crossover ``l < sv_fraction * m * n / (n + l)`` is the serving
+    argument for Nystrom (Hsieh et al., CA-SVM lineage)."""
+    mach = mach or Machine()
+    mu = _mu(mach, kernel)
+    if approx:
+        l = max(landmarks, 1)
+        # phi(Xq): q*l*n MACs + epilogue, transform q*l*l, dot q*l
+        F = q * l * n + mu * q * l + q * l * l + q * l
+    else:
+        msv = max(1, int(sv_fraction * m))
+        F = q * msv * n + mu * q * msv + q * msv
+    return {"flops": F, "time": mach.gamma * F,
+            "flops_per_query": F / max(q, 1)}
 
 
 # --------------------------------------------------------------------------

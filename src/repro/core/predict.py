@@ -1,0 +1,115 @@
+"""Batched, jit-cached, slab-free prediction (DESIGN.md §9).
+
+The legacy predict paths (``objectives.ksvm_predict`` / ``krr_predict``)
+materialize the dense ``(q x m)`` kernel slab ``K(A_test, A_train)``
+against the FULL training set in one serial GEMM — exactly the slab
+bloat the slab-free solvers eliminated from training, and the first
+thing that falls over when a fitted model has to serve heavy query
+traffic (m is millions; q arrives in a stream).
+
+This module serves through the same ``GramOperator`` representation
+hierarchy the solvers train through:
+
+  * exact operators tile each query block through the slab-free KMV
+    contraction (``K(A, Xq)^T w == K(Xq, A) @ w`` — queries ARE the
+    sampled rows, so the ``q x m`` slab never exists; the Pallas KMV
+    kernel applies when the operator carries a ``matvec_impl``);
+  * low-rank operators precompute ``sw = Phi^T w`` ONCE — (l,) words,
+    the entire model — and answer each block with an O(l)-per-query
+    feature-map matmul;
+  * K-SVM models are compacted to their support vectors first
+    (``compact_support``): hinge-loss duals are sparse, so the serving
+    representation shrinks to the SVs before any query arrives.
+
+Queries are padded to power-of-two blocks (capped at ``batch``), so the
+jitted per-block function compiles at most log2(batch) shapes and every
+later call — any query count — hits the jit cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import GramOperator
+
+
+@jax.jit
+def _serve_block(op: GramOperator, sw, Xq):
+    """One query block through the operator's serving reduction.  ``op``
+    is a pytree argument: its arrays are traced (no retrace when the
+    representation changes values) and its static config is part of the
+    cache key (retrace when the kernel/backend changes)."""
+    return op.serve_block(Xq, sw)
+
+
+def compact_support(op: GramOperator, w, tol: float = 0.0):
+    """Drop zero-weight training rows from the serving representation.
+
+    K-SVM duals are sparse (alpha_i = 0 off the margin), so serving only
+    the support vectors cuts per-query work by the SV fraction for exact
+    operators.  Host-side (data-dependent shape): call once at model
+    build, not per query.  Returns ``(compacted_op, compacted_w)``.
+    """
+    w_host = np.asarray(jax.device_get(w))
+    keep = np.flatnonzero(np.abs(w_host) > tol)
+    if keep.size == 0:                   # degenerate all-zero model:
+        keep = np.array([0])             # serve one row, weight zero
+    if keep.size == w_host.shape[0]:
+        return op, w
+    keep_j = jnp.asarray(keep)
+    return op.take(keep_j), w[keep_j]
+
+
+class BatchedPredictor:
+    """``f(Xq) = scale * K(Xq, train) @ w`` served in fixed-size blocks.
+
+    Built once per fitted model (the ``repro.api`` estimators cache one):
+    the representation-side precompute (``op.serve_weights`` — identity
+    for exact, ``Phi^T w`` for low-rank) happens here, and every
+    ``__call__`` only pays the per-block reduction.
+    """
+
+    def __init__(self, op: GramOperator, w, *, batch: int = 1024,
+                 scale: float = 1.0, compact: bool = False,
+                 compact_tol: float = 0.0):
+        if not isinstance(batch, int) or batch < 1:
+            raise ValueError(f"batch must be a positive int, got {batch!r}")
+        if compact:
+            op, w = compact_support(op, w, tol=compact_tol)
+        self.op = op
+        self.batch = batch
+        self.scale = scale
+        self.sw = op.serve_weights(w)
+
+    def _block_shape(self, q: int) -> int:
+        """Pad small requests up to a power-of-two bucket (capped at
+        ``batch``): a stream of varying query counts then compiles at
+        most log2(batch) block shapes instead of one per distinct q."""
+        if q >= self.batch:
+            return self.batch
+        return min(self.batch, max(8, 1 << (q - 1).bit_length()))
+
+    def __call__(self, A_test: jnp.ndarray) -> jnp.ndarray:
+        q = A_test.shape[0]
+        if q == 0:                       # drained queue: graceful empty
+            return jnp.zeros((0,), self.sw.dtype)
+        out, lo = [], 0
+        while lo < q:
+            qb = self._block_shape(q - lo)   # tail drops to its own
+            Xq = A_test[lo:lo + qb]          # (cached) pow-2 bucket
+            if Xq.shape[0] != qb:            # pad to the block shape,
+                pad = qb - Xq.shape[0]       # slice off below
+                Xq = jnp.pad(Xq, ((0, pad), (0, 0)))
+            out.append(_serve_block(self.op, self.sw, Xq))
+            lo += qb
+        f = jnp.concatenate(out)[:q] if len(out) > 1 else out[0][:q]
+        return f * self.scale if self.scale != 1.0 else f
+
+
+def batched_predict(op: GramOperator, w, A_test, *, batch: int = 1024,
+                    scale: float = 1.0) -> jnp.ndarray:
+    """One-shot convenience wrapper over ``BatchedPredictor``."""
+    return BatchedPredictor(op, w, batch=batch, scale=scale)(A_test)

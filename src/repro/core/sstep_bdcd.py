@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from .bdcd import KRRConfig
-from .kernels import GramOperator
+from .kernels import ExactGramOperator
 from .loop import pad_rounds, run_rounds
 
 
@@ -83,15 +83,19 @@ def make_sstep_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
                              s: int,
                              gram_fn: Optional[Callable] = None,
                              op_factory: Optional[Callable] = None,
+                             op=None,
                              ) -> Callable:
     """``round_fn(alpha, (idx, valid)) -> alpha`` for ``loop.run_rounds``:
-    one Algorithm-4 outer round; idx: (s, b), valid: (s,)."""
-    if gram_fn is not None and op_factory is not None:
-        raise ValueError("pass either gram_fn (materialized slab) or "
-                         "op_factory (slab-free operator), not both")
+    one Algorithm-4 outer round; idx: (s, b), valid: (s,).  ``op``
+    injects a prebuilt operator (exact or low-rank) over the training
+    representation; the facade builds it once per fit (DESIGN.md §9)."""
+    if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
+        raise ValueError("pass at most one of gram_fn (materialized "
+                         "slab), op_factory, or op (prebuilt operator)")
     m = A.shape[0]
     inv_lam = 1.0 / cfg.lam
-    op = None if gram_fn else (op_factory or GramOperator)(A, cfg.kernel)
+    if op is None and gram_fn is None:
+        op = (op_factory or ExactGramOperator)(A, cfg.kernel)
 
     def round_fn(alpha, xs):
         idx, valid = xs                        # idx: (s, b)
@@ -122,12 +126,14 @@ def sstep_bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
                    record_rounds: bool = False,
                    gram_fn: Optional[Callable] = None,
                    op_factory: Optional[Callable] = None,
+                   op=None,
                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Run Algorithm 4.  ``schedule`` is the (H, b) block schedule from
     ``bdcd.block_schedule``; ragged H (H % s != 0) runs a masked final
-    short round."""
+    short round.  ``op`` (a pytree — crosses the jit boundary as data)
+    injects a prebuilt operator; see ``make_sstep_bdcd_round_fn``."""
     round_fn = make_sstep_bdcd_round_fn(A, y, cfg, s, gram_fn=gram_fn,
-                                        op_factory=op_factory)
+                                        op_factory=op_factory, op=op)
     xs = pad_rounds(schedule, s)
     res = run_rounds(round_fn, alpha0, xs, record_state=record_rounds)
     return res.state, (res.state_hist if record_rounds else None)

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from .dcd import SVMConfig
-from .kernels import GramOperator
+from .kernels import ExactGramOperator
 from .loop import pad_rounds, run_rounds
 
 
@@ -79,15 +79,22 @@ def make_sstep_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
                             s: int,
                             gram_fn: Optional[Callable] = None,
                             op_factory: Optional[Callable] = None,
+                            op=None,
                             ) -> Callable:
     """``round_fn(alpha, (idx_s, valid)) -> alpha`` for ``loop.run_rounds``:
-    one Algorithm-2 outer round (communication phase + s local solves)."""
-    if gram_fn is not None and op_factory is not None:
-        raise ValueError("pass either gram_fn (materialized slab) or "
-                         "op_factory (slab-free operator), not both")
+    one Algorithm-2 outer round (communication phase + s local solves).
+
+    ``op`` injects a prebuilt, already ``diag(y)``-scaled training
+    operator (``operator.scale_rows(y)``) — exact or low-rank; the
+    facade builds it once per fit (DESIGN.md §9).
+    """
+    if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
+        raise ValueError("pass at most one of gram_fn (materialized "
+                         "slab), op_factory, or op (prebuilt operator)")
     Atil = y[:, None] * A
     nu, omega = cfg.nu, cfg.omega
-    op = None if gram_fn else (op_factory or GramOperator)(Atil, cfg.kernel)
+    if op is None and gram_fn is None:
+        op = (op_factory or ExactGramOperator)(Atil, cfg.kernel)
 
     def round_fn(alpha, xs):
         idx_s, valid = xs
@@ -114,16 +121,19 @@ def sstep_dcd_ksvm(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,
                    record_rounds: bool = False,
                    gram_fn: Optional[Callable] = None,
                    op_factory: Optional[Callable] = None,
+                   op=None,
                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Run Algorithm 2 over ``ceil(H/s)`` rounds (ragged tails allowed).
 
     ``op_factory(Atil, kernel_cfg)`` overrides the slab-free GramOperator
     (e.g. with the Pallas KMV backend from ``repro.kernels.ops`` or the
     all-reduce operator from ``core.distributed``).  ``gram_fn(Atil, rows,
-    kernel_cfg)`` instead selects the materialized-slab path.
+    kernel_cfg)`` instead selects the materialized-slab path.  ``op``
+    (a pytree — crosses the jit boundary as data) injects a prebuilt,
+    already row-scaled training operator; see ``make_sstep_dcd_round_fn``.
     """
     round_fn = make_sstep_dcd_round_fn(A, y, cfg, s, gram_fn=gram_fn,
-                                       op_factory=op_factory)
+                                       op_factory=op_factory, op=op)
     xs = pad_rounds(schedule, s)
     res = run_rounds(round_fn, alpha0, xs, record_state=record_rounds)
     return res.state, (res.state_hist if record_rounds else None)

@@ -18,6 +18,14 @@ disappears; see ``core.perf_model.kmv_round_hbm_bytes``).
 
 Grid: (r/br, m/bm, n/bk) = (j, i, k); j parallel, i and k arbitrary so the
 (c x br) output block stays resident across the whole (i, k) sweep.
+
+The same contraction serves PREDICTION (DESIGN.md §9): with B = a query
+block and X = the model weights, ``U^T X = K(Xq, A_train) @ w`` — the
+batched predict subsystem (``core/predict.py``) tiles queries through
+this kernel via ``ExactGramOperator.serve_block``, so the ``q x m``
+test-kernel slab never exists either; the j-parallel grid axis then
+ranges over queries, which is embarrassingly parallel across serving
+batches.
 """
 from __future__ import annotations
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.kernels import GramOperator, KernelConfig
+from repro.core.kernels import ExactGramOperator, KernelConfig
 from .gram import gram_pallas
 from .kmv import kmv_pallas
 from .ref import gram_ref, kmv_ref
@@ -78,7 +78,7 @@ def make_solver_op_factory(use_pallas: bool = True, interpret=None,
                           **tiles).astype(X.dtype)
 
     def factory(A, cfg):
-        return GramOperator(A, cfg, matvec_impl=matvec_impl)
+        return ExactGramOperator(A, cfg, matvec_impl=matvec_impl)
 
     return factory
 

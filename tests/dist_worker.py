@@ -118,6 +118,36 @@ def main():
     if err > 5e-5:
         failures.append("bdcd1d linear")
 
+    # ---- custom per-rank operator through the op_factory seam ----
+    # (DESIGN.md §9): injecting AllreduceGramOperator explicitly must
+    # reproduce the default path bit-for-bit on both solver families.
+    from repro.core.distributed import AllreduceGramOperator
+
+    def custom_factory(A_loc, kcfg_):
+        rs = None
+        if kcfg_.name == "rbf":
+            rs = jax.lax.psum(jnp.sum(A_loc * A_loc, axis=1), "model")
+        return AllreduceGramOperator("model", A_loc, kcfg_, rs)
+
+    kcfg = KRRConfig(lam=1.0, kernel=KernelConfig("rbf", sigma=0.5))
+    ref, _ = sstep_bdcd_krr(A, y, a0, bsched, kcfg, s=4)
+    got = dist_sstep_bdcd_krr(mesh, A, y, a0, bsched, kcfg, s=4,
+                              op_factory=custom_factory)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    print(f"bdcd-1d custom op_factory maxdiff={err:.3e}")
+    if err > 5e-5:
+        failures.append("bdcd1d op_factory")
+    Ac, yc = classification_dataset(jax.random.key(0), m=64, n=32)
+    scfg = SVMConfig(C=1.0, loss="l1", kernel=KernelConfig("rbf"))
+    csched = coordinate_schedule(jax.random.key(1), 32, 64)
+    ref, _ = dcd_ksvm(Ac, yc, a0, csched, scfg)
+    got = dist_sstep_dcd_ksvm(mesh, Ac, yc, a0, csched, scfg, s=4,
+                              op_factory=custom_factory)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    print(f"dcd-1d custom op_factory maxdiff={err:.3e}")
+    if err > 5e-5:
+        failures.append("dcd1d op_factory")
+
     # ---- RBF kernel through the 2D path too ----
     kcfg = KRRConfig(lam=1.0, kernel=KernelConfig("rbf", sigma=0.5))
     ref, _ = sstep_bdcd_krr(A, y, a0, bsched, kcfg, s=4)
@@ -126,6 +156,23 @@ def main():
     print(f"bdcd-2d rbf maxdiff={err:.3e}")
     if err > 5e-5:
         failures.append("bdcd2d rbf")
+
+    # ---- low-rank representation on the REAL mesh (DESIGN.md §9) ----
+    # same seed -> same landmarks/Phi, so every layout must land on the
+    # serial Nystrom iterates; the 1d layout shards Phi's l columns.
+    ny = dict(method="sstep", s=4, b=4, max_iters=16, seed=7,
+              approx="nystrom", landmarks=16)
+    ref_ny = KernelRidge(lam=1.0, kernel=KernelConfig("rbf", sigma=0.5),
+                         options=SolverOptions(layout="serial", **ny)
+                         ).fit(A, y).alpha
+    for layout in ("1d", "2d"):
+        res = KernelRidge(lam=1.0, kernel=KernelConfig("rbf", sigma=0.5),
+                          options=SolverOptions(layout=layout, mesh=mesh,
+                                                **ny)).fit(A, y)
+        err = float(jnp.max(jnp.abs(res.alpha - ref_ny)))
+        print(f"api krr nystrom {layout} maxdiff={err:.3e}")
+        if err > 5e-5:
+            failures.append(f"api krr nystrom {layout}")
 
     # ---- defer_s train step EXECUTES and matches plain training ----
     import dataclasses

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.kernels import (GramOperator, KernelConfig, gram_slab,
+from repro.core.kernels import (ExactGramOperator, KernelConfig, gram_slab,
                                 kernel_diag, kmv_slab_free)
 from repro.kernels.kmv import kmv_pallas
 from repro.kernels.ref import kmv_ref
@@ -89,7 +89,7 @@ def test_gram_operator_surface(cfg):
     """matvec / cross_block / diag / round_data against slab algebra."""
     A, _, X = _data(60, 1, 40, 1)
     idx = jnp.array([3, 17, 3, 59, 0])          # duplicates allowed
-    op = GramOperator(A, cfg, block=16)
+    op = ExactGramOperator(A, cfg, block=16)
     U = gram_slab(A, A[idx], cfg)
     np.testing.assert_allclose(np.asarray(op.matvec(idx, X[:, 0])),
                                np.asarray(U.T @ X[:, 0]), rtol=2e-5,

@@ -1,7 +1,9 @@
 """Nystrom approximation (paper's future work): error decreases with the
 number of landmarks; Nystrom-BDCD solves the approximated K-RR problem and
 approaches the exact solution as l -> m; composes with the s-step solver
-unchanged."""
+unchanged; kmeans landmarks cover clustered data better than uniform;
+the setup result is a NamedTuple carrying the landmark set the predict
+path needs."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +12,8 @@ from repro.core import (KernelConfig, KRRConfig, bdcd_krr, block_schedule,
                         krr_closed_form, relative_solution_error,
                         sstep_bdcd_krr)
 from repro.core.kernels import gram_slab
-from repro.core.nystrom import (choose_landmarks, nystrom_kernel_error,
+from repro.core.nystrom import (choose_landmarks, fit_nystrom,
+                                kmeans_landmarks, nystrom_kernel_error,
                                 nystrom_krr_setup, nystrom_map)
 from repro.data.synthetic import regression_dataset
 
@@ -45,8 +48,8 @@ def test_nystrom_bdcd_approaches_exact_krr():
     sched = block_schedule(jax.random.key(4), 256, m, 8)
     errs = []
     for l in (16, 88):
-        Phi, lin_cfg = nystrom_krr_setup(jax.random.key(5), A, cfg, l)
-        a, _ = bdcd_krr(Phi, y, jnp.zeros(m), sched, lin_cfg)
+        setup = nystrom_krr_setup(jax.random.key(5), A, cfg, l)
+        a, _ = bdcd_krr(setup.Phi, y, jnp.zeros(m), sched, setup.cfg)
         errs.append(float(relative_solution_error(a, astar)))
     assert errs[1] < errs[0]            # more landmarks -> closer to exact
     assert errs[1] < 0.1
@@ -58,9 +61,59 @@ def test_nystrom_composes_with_sstep():
     m = 64
     A, y = regression_dataset(jax.random.key(6), m, 6)
     cfg = KRRConfig(lam=0.5, kernel=KernelConfig("rbf"))
-    Phi, lin_cfg = nystrom_krr_setup(jax.random.key(7), A, cfg, 24)
+    setup = nystrom_krr_setup(jax.random.key(7), A, cfg, 24)
     sched = block_schedule(jax.random.key(8), 64, m, 4)
-    a1, _ = bdcd_krr(Phi, y, jnp.zeros(m), sched, lin_cfg)
-    a2, _ = sstep_bdcd_krr(Phi, y, jnp.zeros(m), sched, lin_cfg, s=16)
+    a1, _ = bdcd_krr(setup.Phi, y, jnp.zeros(m), sched, setup.cfg)
+    a2, _ = sstep_bdcd_krr(setup.Phi, y, jnp.zeros(m), sched, setup.cfg,
+                           s=16)
     np.testing.assert_allclose(np.asarray(a2), np.asarray(a1),
                                rtol=1e-4, atol=1e-5)
+
+
+def test_setup_carries_landmarks_and_feature_map():
+    """The named setup result keeps what predict time needs: the landmark
+    set and a feature map that reproduces Phi on the training data (the
+    old bare (Phi, cfg) tuple lost both)."""
+    m, l = 48, 12
+    A, y = regression_dataset(jax.random.key(9), m, 5)
+    cfg = KRRConfig(lam=1.0, kernel=KernelConfig("rbf", sigma=0.8))
+    setup = nystrom_krr_setup(jax.random.key(10), A, cfg, l)
+    assert setup.landmarks.shape == (l, 5)
+    assert setup.cfg.kernel.name == "linear"
+    np.testing.assert_allclose(np.asarray(setup.feature_map(A)),
+                               np.asarray(setup.Phi), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(setup.feature_map.landmarks),
+                               np.asarray(setup.landmarks))
+
+
+def test_kmeans_landmarks_beat_uniform_on_clustered_data():
+    """On strongly clustered data, l centroids capture the kernel's
+    dominant rank-l structure better than l uniform rows (Zhang & Kwok):
+    the rank-l approximation error must not be worse."""
+    key = jax.random.key(11)
+    centers = 4.0 * jax.random.normal(jax.random.key(12), (6, 8))
+    assign = jax.random.randint(key, (192,), 0, 6)
+    A = centers[assign] + 0.05 * jax.random.normal(jax.random.key(13),
+                                                   (192, 8))
+    cfg = KernelConfig("rbf", sigma=0.5)
+    L_km = choose_landmarks(jax.random.key(14), A, 6, method="kmeans")
+    L_un = choose_landmarks(jax.random.key(14), A, 6, method="uniform")
+    err_km = nystrom_kernel_error(A, L_km, cfg)
+    err_un = nystrom_kernel_error(A, L_un, cfg)
+    assert err_km <= err_un + 1e-6
+    assert err_km < 0.05                # 6 tight clusters ~= rank 6
+    assert kmeans_landmarks(jax.random.key(15), A, 6).shape == (6, 8)
+
+
+def test_fit_nystrom_map_on_new_points():
+    """phi(X_new) uses the SAME landmarks/transform as training — the
+    kernel between new and train points is approximated consistently:
+    phi(X) phi(A)^T ~= K(X, A)."""
+    A, _ = regression_dataset(jax.random.key(16), 96, 6)
+    X = A[:24] + 0.01                    # near-training queries
+    cfg = KernelConfig("rbf", sigma=1.0)
+    fmap = fit_nystrom(jax.random.key(17), A, cfg, 64)
+    K_xa = gram_slab(X, A, cfg)
+    K_approx = fmap(X) @ fmap(A).T
+    err = (jnp.linalg.norm(K_xa - K_approx) / jnp.linalg.norm(K_xa))
+    assert float(err) < 0.1

@@ -1,0 +1,365 @@
+"""Representation hierarchy + predict subsystem (ISSUE 4 acceptance):
+
+  * ``LowRankGramOperator`` reductions match the materialized
+    ``Phi Phi^T`` gram algebra (matvec / cross_block / diag / rows /
+    round_data / scale_rows / take);
+  * the batched slab-free predict path matches the legacy dense
+    ``objectives.ksvm_predict`` / ``krr_predict`` oracles to <= 1e-5 on
+    both estimators, at every batch/ragged-tail shape;
+  * SV-compacted K-SVM serving returns the full model's decision values;
+  * ``SolverOptions(approx="nystrom", landmarks=l)`` fit/predict
+    round-trips on the serial and 1d layouts, with the Nystrom solution's
+    relative error vs the exact solver bounded by the measured
+    ``nystrom_kernel_error``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import KernelRidge, KernelSVM, SolverOptions
+from repro.core import (KernelConfig, KRRConfig, SVMConfig,
+                        relative_solution_error)
+from repro.core.kernels import (ExactGramOperator, LowRankGramOperator,
+                                gram_slab)
+from repro.core.nystrom import fit_nystrom, nystrom_kernel_error
+from repro.core.objectives import krr_predict, ksvm_predict
+from repro.core.predict import (BatchedPredictor, batched_predict,
+                                compact_support)
+from repro.data.synthetic import classification_dataset, regression_dataset
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+KERN = KernelConfig("rbf", sigma=1.0)
+
+
+@pytest.fixture(scope="module")
+def krr_data():
+    return regression_dataset(jax.random.key(2), m=96, n=8)
+
+
+@pytest.fixture(scope="module")
+def svm_data():
+    return classification_dataset(jax.random.key(0), m=96, n=16)
+
+
+# ---------------------------------------------------------------------------
+# LowRankGramOperator vs the materialized Phi Phi^T gram
+# ---------------------------------------------------------------------------
+
+class TestLowRankOperatorParity:
+    def _op_and_gram(self, krr_data):
+        A, _ = krr_data
+        fmap = fit_nystrom(jax.random.key(5), A, KERN, 24)
+        op = LowRankGramOperator(Phi=fmap(A), fmap=fmap)
+        K = op.Phi @ op.Phi.T                      # materialized oracle
+        return op, K
+
+    def test_reductions_match_materialized(self, krr_data):
+        op, K = self._op_and_gram(krr_data)
+        m = K.shape[0]
+        idx = jnp.array([3, 17, 3, 95, 0])         # duplicates allowed
+        X = jax.random.normal(jax.random.key(6), (m,))
+        U = K[:, idx]                              # (m, r) slab
+        np.testing.assert_allclose(np.asarray(op.matvec(idx, X)),
+                                   np.asarray(U.T @ X), **TOL)
+        np.testing.assert_allclose(np.asarray(op.cross_block(idx)),
+                                   np.asarray(U[idx, :]), **TOL)
+        np.testing.assert_allclose(np.asarray(op.diag(idx)),
+                                   np.asarray(jnp.diagonal(U[idx, :])),
+                                   **TOL)
+        G, uTx = op.round_data(idx, X)
+        np.testing.assert_allclose(np.asarray(G), np.asarray(U[idx, :]),
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(uTx), np.asarray(U.T @ X),
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(op.rows(idx)),
+                                   np.asarray(op.Phi[idx]))
+        assert op.n_samples == m and op.rank == 24
+
+    def test_scale_rows_and_take(self, krr_data):
+        op, K = self._op_and_gram(krr_data)
+        m = K.shape[0]
+        y = jnp.where(jnp.arange(m) % 2 == 0, 1.0, -1.0)
+        idx = jnp.array([1, 2, 5])
+        X = jnp.ones(m)
+        scaled = op.scale_rows(y)                  # diag(y) K diag(y)
+        Ky = (y[:, None] * K) * y[None, :]
+        np.testing.assert_allclose(np.asarray(scaled.matvec(idx, X)),
+                                   np.asarray(Ky[:, idx].T @ X), **TOL)
+        sub = op.take(jnp.array([4, 9, 19]))
+        np.testing.assert_allclose(np.asarray(sub.Phi),
+                                   np.asarray(op.Phi[jnp.array([4, 9, 19])]))
+        assert sub.fmap is op.fmap                 # serving map survives
+
+    def test_sstep_solver_runs_on_lowrank_operator(self, krr_data):
+        """Injecting the low-rank operator into the s-step solver equals
+        running it on the materialized feature map with a linear kernel
+        — the operator IS the representation seam."""
+        from repro.core import block_schedule, sstep_bdcd_krr
+        A, y = krr_data
+        m = A.shape[0]
+        op, _ = self._op_and_gram(krr_data)
+        lin = KRRConfig(lam=1.0, kernel=KernelConfig("linear"))
+        sched = block_schedule(jax.random.key(7), 32, m, 4)
+        a_op, _ = sstep_bdcd_krr(op.Phi, y, jnp.zeros(m), sched, lin,
+                                 s=8, op=op)
+        a_ref, _ = sstep_bdcd_krr(op.Phi, y, jnp.zeros(m), sched, lin,
+                                  s=8)
+        np.testing.assert_allclose(np.asarray(a_op), np.asarray(a_ref),
+                                   **TOL)
+
+
+# ---------------------------------------------------------------------------
+# batched slab-free predict vs the legacy dense oracles
+# ---------------------------------------------------------------------------
+
+class TestBatchedPredict:
+    @pytest.mark.parametrize("batch", [7, 32, 96, 1024])
+    def test_krr_exact_matches_legacy_dense(self, krr_data, batch):
+        A, y = krr_data
+        reg = KernelRidge(lam=1.0, kernel=KERN,
+                          options=SolverOptions(s=8, b=4, max_iters=64),
+                          predict_batch=batch)
+        res = reg.fit(A, y)
+        legacy = krr_predict(A, res.alpha, A, reg.cfg)
+        np.testing.assert_allclose(np.asarray(reg.predict(A)),
+                                   np.asarray(legacy), **TOL)
+
+    def test_ksvm_exact_matches_legacy_dense(self, svm_data):
+        A, y = svm_data
+        clf = KernelSVM(C=1.0, kernel=KERN,
+                        options=SolverOptions(s=8, max_iters=128),
+                        predict_batch=25)       # ragged tail: 96 % 25 != 0
+        res = clf.fit(A, y)
+        legacy = ksvm_predict(A, y, res.alpha, A, clf.cfg)
+        np.testing.assert_allclose(np.asarray(clf.decision_function(A)),
+                                   np.asarray(legacy), **TOL)
+        assert jnp.all(clf.predict(A) == jnp.sign(legacy))
+
+    def test_sv_compaction_preserves_decision_values(self, svm_data):
+        """Dropping zero-alpha rows from the serving representation is
+        exact: hinge duals are sparse, the compacted model must serve
+        the SAME decision values as the full one."""
+        A, y = svm_data
+        clf = KernelSVM(C=1.0, kernel=KERN,
+                        options=SolverOptions(s=8, max_iters=256))
+        res = clf.fit(A, y)
+        w = res.alpha * y
+        full_op = ExactGramOperator(A, KERN)
+        cop, cw = compact_support(full_op, w)
+        n_sv = int(jnp.sum(res.alpha != 0))
+        assert 0 < n_sv < A.shape[0]            # compaction is non-trivial
+        assert cop.A.shape[0] == n_sv
+        full = batched_predict(full_op, w, A, batch=31)
+        compact = batched_predict(cop, cw, A, batch=31)
+        np.testing.assert_allclose(np.asarray(compact), np.asarray(full),
+                                   **TOL)
+        # the estimator path compacts internally and must agree too
+        np.testing.assert_allclose(np.asarray(clf.decision_function(A)),
+                                   np.asarray(full), **TOL)
+
+    def test_compact_support_degenerate_all_zero(self):
+        op = ExactGramOperator(jnp.ones((4, 3)), KERN)
+        cop, cw = compact_support(op, jnp.zeros(4))
+        assert cop.A.shape[0] == 1 and float(cw[0]) == 0.0
+
+    def test_predictor_jit_cache_reuse(self, krr_data):
+        """Different query counts reuse bucketed block shapes (padded) —
+        values must be identical to the one-shot call."""
+        A, y = krr_data
+        op = ExactGramOperator(A, KERN)
+        w = jax.random.normal(jax.random.key(8), (A.shape[0],))
+        pred = BatchedPredictor(op, w, batch=40)
+        for q in (1, 39, 40, 41, 96):
+            np.testing.assert_allclose(
+                np.asarray(pred(A[:q])),
+                np.asarray(gram_slab(A[:q], A, KERN) @ w), **TOL)
+
+    def test_predictor_block_buckets_and_empty(self, krr_data):
+        """A stream of varying query counts compiles at most
+        log2(batch) block shapes (power-of-two buckets), and a drained
+        queue (q=0) returns an empty array instead of crashing."""
+        A, _ = krr_data
+        op = ExactGramOperator(A, KERN)
+        w = jax.random.normal(jax.random.key(9), (A.shape[0],))
+        pred = BatchedPredictor(op, w, batch=64)
+        blocks = {pred._block_shape(q) for q in range(1, 97)}
+        assert blocks <= {8, 16, 32, 64}
+        # ragged tail reuses a smaller bucket, values unchanged
+        np.testing.assert_allclose(
+            np.asarray(pred(A[:65])),
+            np.asarray(gram_slab(A[:65], A, KERN) @ w), **TOL)
+        empty = pred(A[:0])
+        assert empty.shape == (0,)
+        with pytest.raises(ValueError):
+            BatchedPredictor(op, w, batch=0)
+        from repro.api import KernelRidge
+        with pytest.raises(ValueError):
+            KernelRidge(predict_batch=-1)
+
+
+# ---------------------------------------------------------------------------
+# facade approx="nystrom" round-trips (serial + 1d)
+# ---------------------------------------------------------------------------
+
+class TestFacadeNystrom:
+    @pytest.mark.parametrize("layout", ["serial", "1d"])
+    def test_krr_fit_predict_roundtrip(self, krr_data, layout):
+        A, y = krr_data
+        opts = SolverOptions(method="sstep", s=8, b=4, max_iters=512,
+                             layout=layout, approx="nystrom", landmarks=80)
+        reg = KernelRidge(lam=1.0, kernel=KERN, options=opts)
+        res = reg.fit(A, y)
+        assert res.representation == "nystrom(l=80)"
+        assert res.comm["approx"] == "nystrom"
+        assert res.comm["setup_flops"] > 0
+
+        # acceptance bound: solution error vs the EXACT solver stays
+        # within the measured rank-l kernel error
+        exact = KernelRidge(
+            lam=1.0, kernel=KERN,
+            options=SolverOptions(method="sstep", s=8, b=4,
+                                  max_iters=512)).fit(A, y)
+        rel = float(relative_solution_error(res.alpha, exact.alpha))
+        kerr = nystrom_kernel_error(A, reg.op_.fmap.landmarks, KERN)
+        assert rel <= kerr, (rel, kerr)
+
+        # predictions serve through the SAME fitted feature map, and the
+        # batched path matches the legacy dense predict on Phi
+        pred = reg.predict(A)
+        lin_cfg = KRRConfig(lam=1.0, kernel=KernelConfig("linear"))
+        legacy = krr_predict(reg.op_.Phi, res.alpha, reg.op_.Phi, lin_cfg)
+        np.testing.assert_allclose(np.asarray(pred), np.asarray(legacy),
+                                   **TOL)
+
+    @pytest.mark.parametrize("layout", ["serial", "1d"])
+    def test_ksvm_fit_predict_roundtrip(self, svm_data, layout):
+        A, y = svm_data
+        opts = SolverOptions(method="sstep", s=8, max_iters=256,
+                             layout=layout, approx="nystrom", landmarks=64)
+        clf = KernelSVM(C=1.0, kernel=KERN, options=opts)
+        res = clf.fit(A, y)
+        assert res.representation == "nystrom(l=64)"
+        d = clf.decision_function(A)
+        assert d.shape == (A.shape[0],)
+        # decision values equal the low-rank kernel expansion
+        Phi = clf.op_.Phi
+        want = Phi @ (Phi.T @ (res.alpha * y))
+        np.testing.assert_allclose(np.asarray(d), np.asarray(want), **TOL)
+        # approximate-kernel training should still classify comparably
+        exact = KernelSVM(C=1.0, kernel=KERN,
+                          options=SolverOptions(method="sstep", s=8,
+                                                max_iters=256)).fit(A, y)
+        acc_exact = float(jnp.mean(jnp.sign(
+            ksvm_predict(A, y, exact.alpha, A, clf.cfg)) == y))
+        acc_ny = float(jnp.mean(clf.predict(A) == y))
+        assert acc_ny >= acc_exact - 0.1
+
+    def test_full_rank_nystrom_matches_exact_solver(self, krr_data):
+        """l = m: the representation is exact (up to the jitter floor),
+        so the facade's low-rank path must land on the exact solution."""
+        A, y = krr_data
+        m = A.shape[0]
+        base = dict(method="sstep", s=8, b=4, max_iters=256)
+        res_n = KernelRidge(lam=1.0, kernel=KERN,
+                            options=SolverOptions(approx="nystrom",
+                                                  landmarks=m, **base)
+                            ).fit(A, y)
+        res_e = KernelRidge(lam=1.0, kernel=KERN,
+                            options=SolverOptions(**base)).fit(A, y)
+        assert float(relative_solution_error(res_n.alpha,
+                                             res_e.alpha)) < 1e-2
+
+    def test_kmeans_landmark_option(self, krr_data):
+        A, y = krr_data
+        opts = SolverOptions(s=8, b=4, max_iters=64, approx="nystrom",
+                             landmarks=32, landmark_method="kmeans")
+        res = KernelRidge(lam=1.0, kernel=KERN, options=opts).fit(A, y)
+        assert res.alpha.shape == (A.shape[0],)
+
+    def test_landmarks_clip_to_m(self, krr_data):
+        A, y = krr_data
+        opts = SolverOptions(s=8, b=4, max_iters=32, approx="nystrom",
+                             landmarks=10_000)
+        res = KernelRidge(lam=1.0, kernel=KERN, options=opts).fit(A, y)
+        assert res.representation == f"nystrom(l={A.shape[0]})"
+
+    @pytest.mark.parametrize("bad", [
+        dict(approx="rff"),
+        dict(approx="nystrom", landmarks=0),
+        dict(approx="nystrom", landmark_method="leverage"),
+    ])
+    def test_bad_options_raise_eagerly(self, bad):
+        with pytest.raises(ValueError):
+            SolverOptions(**bad)
+
+    @pytest.mark.parametrize("l", [16, 64, 256])
+    @pytest.mark.parametrize("s", [1, 8])
+    def test_lowrank_pricing_invariants(self, l, s):
+        """Representation pricing (DESIGN.md §9): for l << n the
+        low-rank round flops undercut exact ones (setup aside), the
+        setup cost is what separates total from round cost, low-rank
+        serving beats exact per query, and SV compaction scales exact
+        serving linearly."""
+        from repro.core.perf_model import (lowrank_setup_cost,
+                                           modeled_fit_cost,
+                                           modeled_predict_cost)
+        m, n, q = 4096, 2048, 512
+        exact = modeled_fit_cost(m, n, "rbf", s=s, iters=64, P=1)
+        low = modeled_fit_cost(m, n, "rbf", s=s, iters=64, P=1,
+                               approx="nystrom", landmarks=l)
+        setup = lowrank_setup_cost(m, n, l, "rbf")
+        np.testing.assert_allclose(low["setup_flops"], setup["flops"])
+        assert low["flops"] - low["setup_flops"] < exact["flops"]
+        # linear-factor rounds psum only the contracted (sb, sb+1)
+        # words; the exact nonlinear payload is m-sized (Thm 2)
+        sb, rounds = s * 1, (64 if s == 1 else 64 / s)
+        np.testing.assert_allclose(low["words"], rounds * sb * (sb + 1))
+        assert low["words"] < exact["words"]
+        pe = modeled_predict_cost(m, n, q, "rbf")
+        pl = modeled_predict_cost(m, n, q, "rbf", approx="nystrom",
+                                  landmarks=l)
+        assert pl["flops_per_query"] < pe["flops_per_query"]
+        half = modeled_predict_cost(m, n, q, "rbf", sv_fraction=0.5)
+        np.testing.assert_allclose(half["flops"], pe["flops"] / 2,
+                                   rtol=1e-2)
+
+    def test_lowrank_gap_matches_dense_oracle(self, svm_data):
+        """The O(m l) factored duality gap equals the generic oracle
+        evaluated with a linear kernel over Phi (which builds the m x m
+        gram) — for both loss variants."""
+        from repro.core import SVMConfig, ksvm_duality_gap
+        from repro.core.objectives import ksvm_duality_gap_lowrank
+        A, y = svm_data
+        fmap = fit_nystrom(jax.random.key(21), A, KERN, 32)
+        Phi = fmap(A)
+        alpha = jax.random.uniform(jax.random.key(22), (A.shape[0],))
+        for loss in ("l1", "l2"):
+            cfg = SVMConfig(C=1.0, loss=loss,
+                            kernel=KernelConfig("linear"))
+            np.testing.assert_allclose(
+                float(ksvm_duality_gap_lowrank(Phi, y, alpha, cfg)),
+                float(ksvm_duality_gap(Phi, y, alpha, cfg)),
+                rtol=1e-4)
+
+    def test_ksvm_tol_stopping_under_approx(self, svm_data):
+        """K-SVM low-rank tolerance stopping runs the factored gap (no
+        m x m gram) and terminates."""
+        A, y = svm_data
+        opts = SolverOptions(method="sstep", s=8, max_iters=4096,
+                             tol=1e-3, check_every=8, approx="nystrom",
+                             landmarks=64)
+        res = KernelSVM(C=1.0, kernel=KERN, options=opts).fit(A, y)
+        assert res.converged
+        assert res.history[-1] <= 1e-3
+
+    def test_tol_stopping_under_approx(self, krr_data):
+        """The stopping metric is evaluated under the SAME approximate
+        kernel the solver optimizes, so tolerance stopping terminates."""
+        A, y = krr_data
+        opts = SolverOptions(method="sstep", s=8, b=4, max_iters=2048,
+                             tol=1e-4, check_every=4, approx="nystrom",
+                             landmarks=80)
+        res = KernelRidge(lam=1.0, kernel=KERN, options=opts).fit(A, y)
+        assert res.converged
+        assert res.history[-1] <= 1e-4
