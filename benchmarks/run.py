@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
   fig5   slab-free vs materialized round (HBM bytes/time)   [EXPERIMENTS §Perf]
   fig6   predict throughput: exact vs low-rank representation,
          batched slab-free vs legacy dense                  [DESIGN §9]
+  fig7   sweep throughput: vmapped fleet vs sequential fits,
+         warm-started path iteration counts                 [DESIGN §10]
   roofline  assigned-arch roofline table from the dry-run   [EXPERIMENTS §Roofline]
 
 ``--fast`` shrinks datasets/iterations (used by CI / test_system).
@@ -29,7 +31,8 @@ def main() -> None:
 
     from benchmarks import (fig1_dcd_convergence, fig2_bdcd_convergence,
                             fig3_scaling, fig4_breakdown, fig5_slabfree,
-                            fig6_predict, roofline, table4_blocksize)
+                            fig6_predict, fig7_sweep, roofline,
+                            table4_blocksize)
 
     def paper_dist_subprocess(fast=False):
         # needs its own process: it forces a 16-device host platform
@@ -57,6 +60,7 @@ def main() -> None:
         "table4": table4_blocksize.run,
         "fig5": fig5_slabfree.run,
         "fig6": fig6_predict.run,
+        "fig7": fig7_sweep.run,
         "paper_dist": paper_dist_subprocess,
         "roofline": roofline.run,
     }

@@ -32,7 +32,7 @@ res_s = clf_s.fit(A, y)
 
 dev = float(jnp.max(jnp.abs(res_dcd.alpha - res_s.alpha)))
 print(f"max |alpha_sstep - alpha_dcd| = {dev:.2e}   (same solution)")
-print(f"duality gap after {H} iters  = {float(res_s.history[-1]):.3e}")
+print(f"duality gap after {H} iters  = {float(res_s.metric_history()[-1]):.3e}")
 print(f"train accuracy = {float(jnp.mean(clf_s.predict(A) == y)):.3f}")
 print(f"modeled comm: classical {res_dcd.comm['msgs']:.0f} msgs vs "
       f"s-step {res_s.comm['msgs']:.0f} msgs for the same words")

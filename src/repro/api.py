@@ -44,6 +44,14 @@ every kernel (see ``LowRankGramOperator.scale_rows``).  Prediction always runs t
 the batched slab-free subsystem (``core/predict.py``): the dense
 ``(q x m)`` test-kernel slab of the legacy ``objectives.*_predict``
 oracles never materializes.
+
+Sweeps (DESIGN.md §10): ``fit`` takes a ``warm_start=`` alpha and
+``fit_path`` solves a warm-started regularization ladder; whole grids
+solve as ONE vmapped fleet via ``repro.tune.solve_fleet`` (k-fold
+search: ``repro.tune.cross_validate``).  Knobs left at ``"auto"``
+(``SolverOptions(s="auto", b="auto", layout="auto", approx="auto")``)
+resolve through the perf-model autotuner before the solve; the chosen
+``TunedPlan`` lands on ``FitResult.plan``.
 """
 from __future__ import annotations
 
@@ -75,6 +83,7 @@ from repro.core.predict import BatchedPredictor
 METHODS = ("classical", "sstep")
 LAYOUTS = ("serial", "1d", "2d")
 APPROX = (None, "nystrom")
+AUTO = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,10 +92,15 @@ class SolverOptions:
 
     method:      "classical" (communicate every iteration) or "sstep"
                  (one communication round per s iterations, same iterates).
-    s:           s-step depth (ignored for method="classical").
-    b:           block size (K-RR only; K-SVM is scalar-coordinate).
+    s:           s-step depth (ignored for method="classical"), or
+                 "auto" — resolved per problem by the perf-model-driven
+                 autotuner (repro.tune.autotune, DESIGN.md §10) before
+                 the solve; the chosen plan lands on ``FitResult.plan``.
+    b:           block size (K-RR only; K-SVM is scalar-coordinate),
+                 or "auto" (autotuned jointly with s).
     layout:      "serial", "1d" (paper's feature-partitioned shard_map
-                 layout), or "2d" (samples x features, beyond paper).
+                 layout), "2d" (samples x features, beyond paper), or
+                 "auto" (autotuned over the visible device count).
     mesh:        jax Mesh for 1d/2d; auto-built over the host's devices
                  when None ("model"-major for 1d, "data"-major for 2d).
     slab_free:   consume kernel slabs through the GramOperator (default);
@@ -101,18 +115,23 @@ class SolverOptions:
     record:      keep the metric history even when tol == 0.
     seed:        PRNG seed for the coordinate/block schedule (and, folded,
                  for the landmark draw when approx is on).
-    approx:      kernel representation: None (exact) or "nystrom" —
+    approx:      kernel representation: None (exact), "nystrom" —
                  rank-``landmarks`` feature map built once per fit, then
                  every per-round reduction runs O(landmarks)-wide through
                  a ``LowRankGramOperator`` (DESIGN.md §9) and prediction
-                 serves through the same map.
+                 serves through the same map — or "auto" (the autotuner
+                 picks the cheaper modeled representation).
     landmarks:   Nystrom rank l (clipped to m at fit time).
     landmark_method: "uniform" row sampling or "kmeans" centroids.
+    probe:       autotune refinement: when > 0 and any knob is "auto",
+                 the top modeled candidates are additionally MEASURED
+                 for ``probe`` outer rounds each and the fastest wins
+                 (0 = trust the Hockney model alone).
     """
 
     method: str = "sstep"
-    s: int = 16
-    b: int = 1
+    s: Union[int, str] = 16
+    b: Union[int, str] = 1
     layout: str = "serial"
     mesh: Optional[object] = None
     slab_free: bool = True
@@ -124,36 +143,57 @@ class SolverOptions:
     approx: Optional[str] = None
     landmarks: int = 256
     landmark_method: str = "uniform"
+    probe: int = 0
 
     def __post_init__(self):
         if self.method not in METHODS:
             raise ValueError(
                 f"method must be one of {METHODS}, got {self.method!r}")
-        if self.layout not in LAYOUTS:
-            raise ValueError(
-                f"layout must be one of {LAYOUTS}, got {self.layout!r}")
-        for name in ("s", "b", "max_iters", "check_every", "landmarks"):
+        if self.layout not in LAYOUTS + (AUTO,):
+            raise ValueError(f"layout must be one of "
+                             f"{LAYOUTS + (AUTO,)}, got {self.layout!r}")
+        for name in ("s", "b"):
+            v = getattr(self, name)
+            if v != AUTO and (not isinstance(v, int) or v < 1):
+                raise ValueError(f"{name} must be a positive int or "
+                                 f"{AUTO!r}, got {v!r}")
+        for name in ("max_iters", "check_every", "landmarks"):
             v = getattr(self, name)
             if not isinstance(v, int) or v < 1:
                 raise ValueError(f"{name} must be a positive int, got {v!r}")
+        if not isinstance(self.probe, int) or self.probe < 0:
+            raise ValueError(f"probe must be an int >= 0, "
+                             f"got {self.probe!r}")
         if not self.tol >= 0.0:
             raise ValueError(f"tol must be >= 0, got {self.tol!r}")
         if not self.slab_free and self.layout == "2d":
             raise ValueError("the 2d layout is slab-free by construction; "
                              "slab_free=False is only meaningful for the "
                              "serial and 1d layouts")
-        if self.approx not in APPROX:
-            raise ValueError(
-                f"approx must be one of {APPROX}, got {self.approx!r}")
+        if self.approx not in APPROX + (AUTO,):
+            raise ValueError(f"approx must be one of {APPROX + (AUTO,)}, "
+                             f"got {self.approx!r}")
         if self.landmark_method not in LANDMARK_METHODS:
             raise ValueError(f"landmark_method must be one of "
                              f"{LANDMARK_METHODS}, got "
                              f"{self.landmark_method!r}")
 
     @property
+    def needs_autotune(self) -> bool:
+        """Any knob left at "auto" — ``fit`` resolves them through
+        ``repro.tune.autotune`` before solving (DESIGN.md §10)."""
+        return AUTO in (self.s, self.b, self.layout, self.approx)
+
+    @property
     def s_eff(self) -> int:
         """Inner iterations per communication round (1 for classical)."""
-        return self.s if self.method == "sstep" else 1
+        if self.method != "sstep":
+            return 1
+        if self.s == AUTO:
+            raise ValueError('s="auto" is unresolved — fit() resolves it '
+                             'via repro.tune.autotune.resolve_options '
+                             'before solving')
+        return self.s
 
 
 @dataclasses.dataclass
@@ -173,8 +213,18 @@ class FitResult:
     iters_run: int
     wall_time_s: float
     comm: dict                     # Hockney model: flops/words/msgs/time
-    options: SolverOptions
+    options: SolverOptions         # the RESOLVED options the solve ran
+                                   # with (auto knobs already concrete)
     representation: str = "exact"  # "exact" | "nystrom(l=...)"
+    plan: Optional[object] = None  # tune.TunedPlan when any knob was
+                                   # "auto" (modeled frontier + choice)
+
+    def metric_history(self) -> Optional[np.ndarray]:
+        """The evaluated convergence trajectory — the canonical accessor
+        (mirrors ``LoopResult.metric_history``): every recorded metric
+        value in evaluation order, ``None`` when the run recorded none
+        (``tol == 0`` and ``record=False``)."""
+        return self.history
 
 
 def _check_predict_batch(batch) -> int:
@@ -288,25 +338,48 @@ def _dist_call(problem, layout, mesh, A, y, a0, schedule, cfg, s,
 
 def _build_representation(A, cfg, opts: SolverOptions):
     """The once-per-fit representation build (DESIGN.md §9): returns
-    ``(op, A_solve, cfg_solve)`` where ``op`` is the raw-data
-    ``GramOperator`` the estimator keeps for prediction, and
-    ``(A_solve, cfg_solve)`` is the (data, config) pair the solvers and
-    convergence metrics run on — ``(A, cfg)`` for exact, ``(Phi,
-    linear-kernel cfg)`` for Nystrom (the same solvers then perform
-    O(landmarks)-wide reductions; the s-step schedule is untouched)."""
+    ``(op, A_solve)`` where ``op`` is the raw-data ``GramOperator`` the
+    estimator keeps for prediction and ``A_solve`` is the data the
+    solvers run on — ``A`` for exact, ``Phi`` for Nystrom (the same
+    solvers then perform O(landmarks)-wide reductions; the s-step
+    schedule is untouched).  Pair with ``_solve_cfg`` for the matching
+    solver config; warm-started paths and fleets (repro.tune) build
+    this ONCE and reuse it across every solve in the sweep.
+
+    The landmark draw folds ``opts.seed`` (like the schedule key), so
+    Nystrom fits — uniform OR kmeans landmarks — are reproducible
+    end-to-end from the single facade seed."""
     if opts.approx is None:
-        return ExactGramOperator(A, cfg.kernel), A, cfg
+        return ExactGramOperator(A, cfg.kernel), A
     l = min(opts.landmarks, A.shape[0])
     lkey = jax.random.fold_in(jax.random.key(opts.seed), 1)
     fmap = fit_nystrom(lkey, A, cfg.kernel, l,
                        method=opts.landmark_method)
     op = lowrank_operator(fmap, A)
-    cfg_lin = dataclasses.replace(cfg, kernel=KernelConfig("linear"))
-    return op, op.Phi, cfg_lin
+    return op, op.Phi
 
 
-def _fit(problem: str, A, y, cfg, opts: SolverOptions):
+def _solve_cfg(cfg, opts: SolverOptions):
+    """The config the solvers and convergence metrics run on: ``cfg``
+    itself for exact, the linear-kernel replacement for low-rank runs
+    (the factor Phi already carries the nonlinearity).  Cheap — safe to
+    recompute per solve while the operator is reused (reg_path)."""
+    if opts.approx is None:
+        return cfg
+    return dataclasses.replace(cfg, kernel=KernelConfig("linear"))
+
+
+def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
+         a0=None, rep=None):
     m, n = A.shape
+
+    plan = None
+    if opts.needs_autotune:
+        from repro.tune.autotune import resolve_options
+        plan = resolve_options(m, n, cfg, opts, problem=problem,
+                               A=A, y=y)
+        opts = plan.options
+
     H = opts.max_iters
     s = opts.s_eff
     b = opts.b if problem == "krr" else 1
@@ -314,8 +387,13 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions):
 
     t0 = time.perf_counter()
     # representation build (inside the clock: it is part of the solve
-    # cost, mirrored by comm["setup_time"] in the Hockney model)
-    rep_op, A_s, cfg_s = _build_representation(A, cfg, opts)
+    # cost, mirrored by comm["setup_time"] in the Hockney model) —
+    # unless a prebuilt representation is injected (warm-started paths
+    # amortize ONE build across the whole ladder)
+    if rep is None:
+        rep = _build_representation(A, cfg, opts)
+    rep_op, A_s = rep
+    cfg_s = _solve_cfg(cfg, opts)
     if problem == "ksvm":
         schedule = coordinate_schedule(key, H, m)
         metric_name = "duality_gap"
@@ -329,7 +407,11 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions):
         # contracts algebraically (kmv_slab_free linear branch:
         # Phi @ (Phi^T alpha)) — already O(m l), no factored twin needed
         metric_host = lambda a: float(krr_rel_residual(A_s, y, a, cfg_s))
-    a0 = jnp.zeros(m, A.dtype)
+    # warm start (repro.tune paths): replaying FitResult.schedule from
+    # the SAME a0 reproduces alpha, so warm-started results stay
+    # replayable — the schedule contract is unchanged
+    a0 = (jnp.zeros(m, A.dtype) if a0 is None
+          else jnp.asarray(a0, A.dtype))
     want_metric = opts.tol > 0.0 or opts.record
     tol = opts.tol if opts.tol > 0.0 else NO_TOL
 
@@ -361,7 +443,7 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions):
             alpha = res.state
             rounds_run = int(res.rounds_run)
             converged = bool(res.converged)
-            history = np.asarray(res.metric_hist)[:int(res.checks_run)]
+            history = np.asarray(res.metric_history())
         iters_run = min(rounds_run * s, H)
     else:
         # the shard_map bodies build their own per-rank operators from
@@ -407,7 +489,7 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions):
                        converged=converged,
                        rounds_run=rounds_run, iters_run=iters_run,
                        wall_time_s=wall, comm=comm, options=opts,
-                       representation=rep_name)
+                       representation=rep_name, plan=plan)
     return result, rep_op
 
 
@@ -432,13 +514,33 @@ class KernelSVM:
         self.options = options or SolverOptions()
         self.predict_batch = _check_predict_batch(predict_batch)
 
-    def fit(self, A, y) -> FitResult:
-        result, op = _fit("ksvm", A, y, self.cfg, self.options)
+    def fit(self, A, y, warm_start=None) -> FitResult:
+        """Solve the dual.  ``warm_start`` seeds alpha (shape (m,)) —
+        e.g. the solution at a neighbouring C (see ``fit_path``);
+        ``None`` is the usual cold start at zero."""
+        result, op = _fit("ksvm", A, y, self.cfg, self.options,
+                          a0=warm_start)
         self.A_, self.y_, self.alpha_ = A, y, result.alpha
         self.op_ = op
         self.result_ = result
         self._predictor = None
         return result
+
+    def fit_path(self, A, y, Cs):
+        """Warm-started solve ladder over a C grid
+        (``repro.tune.path.reg_path``, DESIGN.md §10): one shared
+        representation build, each solve seeded from its neighbour.
+        Returns a ``PathResult``; the estimator is left fitted at the
+        ladder's final (largest-C, least-regularized) member."""
+        from repro.tune.path import reg_path
+        path = reg_path(A, y, Cs=Cs, cfg=self.cfg, options=self.options)
+        last = path.results[-1]
+        self.cfg = dataclasses.replace(self.cfg, C=float(path.values[-1]))
+        self.A_, self.y_, self.alpha_ = A, y, last.alpha
+        self.op_ = path.op
+        self.result_ = last
+        self._predictor = None
+        return path
 
     def decision_function(self, A_test):
         if self._predictor is None:
@@ -469,13 +571,35 @@ class KernelRidge:
         self.options = options or SolverOptions()
         self.predict_batch = _check_predict_batch(predict_batch)
 
-    def fit(self, A, y) -> FitResult:
-        result, op = _fit("krr", A, y, self.cfg, self.options)
+    def fit(self, A, y, warm_start=None) -> FitResult:
+        """Solve the dual.  ``warm_start`` seeds alpha (shape (m,)) —
+        e.g. the solution at a neighbouring lambda (see ``fit_path``);
+        ``None`` is the usual cold start at zero."""
+        result, op = _fit("krr", A, y, self.cfg, self.options,
+                          a0=warm_start)
         self.A_, self.alpha_ = A, result.alpha
         self.op_ = op
         self.result_ = result
         self._predictor = None
         return result
+
+    def fit_path(self, A, y, lams):
+        """Warm-started solve ladder over a lambda grid
+        (``repro.tune.path.reg_path``, DESIGN.md §10): one shared
+        representation build, each solve seeded from its neighbour.
+        Returns a ``PathResult``; the estimator is left fitted at the
+        ladder's final (smallest-lambda, least-regularized) member."""
+        from repro.tune.path import reg_path
+        path = reg_path(A, y, lams=lams, cfg=self.cfg,
+                        options=self.options)
+        last = path.results[-1]
+        self.cfg = dataclasses.replace(self.cfg,
+                                       lam=float(path.values[-1]))
+        self.A_, self.alpha_ = A, last.alpha
+        self.op_ = path.op
+        self.result_ = last
+        self._predictor = None
+        return path
 
     def predict(self, A_test):
         if self._predictor is None:

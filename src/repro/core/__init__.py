@@ -1,16 +1,18 @@
 from .kernels import (KernelConfig, GramOperator, ExactGramOperator,
                       LowRankGramOperator, gram_slab, gram_full,
                       apply_epilogue, kernel_diag, kmv_slab_free)
-from .loop import LoopResult, NO_TOL, pad_rounds, run_rounds
+from .loop import (LoopResult, NO_TOL, pad_rounds, run_rounds,
+                   run_rounds_fleet)
 from .dcd import (SVMConfig, dcd_ksvm, coordinate_schedule, L1, L2,
                   make_dcd_round_fn)
 from .sstep_dcd import sstep_dcd_ksvm, make_sstep_dcd_round_fn
 from .bdcd import KRRConfig, bdcd_krr, block_schedule, make_bdcd_round_fn
 from .sstep_bdcd import sstep_bdcd_krr, make_sstep_bdcd_round_fn
 from .objectives import (ksvm_duality_gap, ksvm_duality_gap_lowrank,
-                         ksvm_dual_objective,
+                         ksvm_dual_objective, ksvm_gap_from_Qa,
                          ksvm_primal_objective, krr_closed_form,
                          krr_dual_objective, krr_rel_residual,
+                         krr_rel_residual_value,
                          relative_solution_error, ksvm_predict, krr_predict)
 from .nystrom import (NystromMap, choose_landmarks, fit_nystrom,
                       kmeans_landmarks, lowrank_operator,

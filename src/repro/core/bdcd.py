@@ -52,16 +52,21 @@ def block_schedule(key: jax.Array, H: int, m: int, b: int) -> jnp.ndarray:
 def make_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
                        gram_fn: Optional[Callable] = None,
                        op_factory: Optional[Callable] = None,
-                       op=None) -> Callable:
+                       op=None, lam=None) -> Callable:
     """``round_fn(alpha, idx) -> alpha`` for ``loop.run_rounds``: one
     Algorithm-3 exact b x b block solve.  ``op`` injects a prebuilt
     ``GramOperator`` (exact or low-rank) over the training
-    representation; the facade builds it once per fit (DESIGN.md §9)."""
+    representation; the facade builds it once per fit (DESIGN.md §9).
+
+    ``lam`` overrides ``cfg.lam`` with a TRACEABLE value — the batched
+    cfg leaf of the fleet solver (repro.tune): ``jax.vmap`` over
+    per-member scalars turns one closure into F lockstep problems
+    sharing the operator (DESIGN.md §10)."""
     if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
         raise ValueError("pass at most one of gram_fn (materialized "
                          "slab), op_factory, or op (prebuilt operator)")
     m = A.shape[0]
-    inv_lam = 1.0 / cfg.lam
+    inv_lam = 1.0 / (cfg.lam if lam is None else lam)
     if op is None and gram_fn is None:
         op = (op_factory or ExactGramOperator)(A, cfg.kernel)
 

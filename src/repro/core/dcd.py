@@ -58,6 +58,17 @@ class SVMConfig:
         return 0.0 if self.loss == L1 else 1.0 / (2.0 * self.C)
 
 
+def _nu_omega(cfg: SVMConfig, C=None):
+    """(nu, omega) from the config, or re-derived from a traceable ``C``
+    override (the fleet solvers' batched cfg leaf — see
+    ``make_dcd_round_fn``)."""
+    if C is None:
+        return cfg.nu, cfg.omega
+    if cfg.loss == L1:
+        return C, 0.0
+    return jnp.inf, 1.0 / (2.0 * C)
+
+
 def coordinate_schedule(key: jax.Array, H: int, m: int) -> jnp.ndarray:
     """i_k ~ Uniform[m], k = 1..H.  Identical schedule is used by DCD and
     s-step DCD so that the two produce bitwise-comparable iterates."""
@@ -78,7 +89,7 @@ def _dcd_theta(alpha_i, g, eta, nu):
 def make_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
                       gram_fn: Optional[Callable] = None,
                       op_factory: Optional[Callable] = None,
-                      op=None) -> Callable:
+                      op=None, C=None) -> Callable:
     """``round_fn(alpha, i) -> alpha`` for ``loop.run_rounds``: one
     Algorithm-1 coordinate step.  This closure IS the classical solver;
     ``dcd_ksvm`` and the ``repro.api`` facade both drive it.
@@ -87,12 +98,17 @@ def make_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
     representation (already row-scaled by ``diag(y)`` — use
     ``operator.scale_rows(y)``); the facade builds it once per fit and
     reuses it for prediction (DESIGN.md §9).
+
+    ``C`` overrides ``cfg.C`` with a TRACEABLE value — the batched cfg
+    leaf of the fleet solver (repro.tune): the derived clip bound nu and
+    L2 shift omega become traced scalars, so ``jax.vmap`` over
+    per-member C's solves a whole C-grid in lockstep (DESIGN.md §10).
     """
     if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
         raise ValueError("pass at most one of gram_fn (materialized "
                          "slab), op_factory, or op (prebuilt operator)")
     Atil = y[:, None] * A                       # diag(y) @ A
-    nu, omega = cfg.nu, cfg.omega
+    nu, omega = _nu_omega(cfg, C)
     if op is None and gram_fn is None:
         op = (op_factory or ExactGramOperator)(Atil, cfg.kernel)
 

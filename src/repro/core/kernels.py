@@ -12,6 +12,13 @@ through a ``GramOperator`` — ``ExactGramOperator`` (raw features +
 kernel config, KMV-streamed) or ``LowRankGramOperator`` (Nystrom/feature
 factor ``Phi``, every reduction O(l)-wide) — so the kernel
 *representation* swaps without touching solver or serving math.
+
+Operators are registered pytrees, which is also what makes solver
+FLEETS cheap (repro.tune, DESIGN.md §10): under ``jax.vmap`` an
+operator closed over (or passed) unbatched stays unbatched, so the slab
+GEMM and epilogue of ``matvec``/``round_data`` are computed once per
+round for all F vmapped members — only the contraction against the
+batched right-hand side replicates.
 """
 from __future__ import annotations
 
@@ -208,11 +215,18 @@ class GramOperator:
         raise NotImplementedError
 
     def serve_weights(self, w: jnp.ndarray) -> jnp.ndarray:
-        """Representation-side precompute for serving (default: identity)."""
+        """Representation-side precompute for serving (default: identity).
+
+        ``w`` may be one model (m,) or F stacked models (m, F) — e.g. a
+        solver fleet's solutions (repro.tune): the precompute and every
+        ``serve_block`` call then serve ALL F models in one sweep (the
+        cross-validation scorer grades a whole regularization grid with
+        a single KMV per validation fold)."""
         return w
 
     def serve_block(self, Xq: jnp.ndarray, sw: jnp.ndarray) -> jnp.ndarray:
-        """``K(Xq, train) @ w`` for one (q, n) query block, slab-free."""
+        """``K(Xq, train) @ w`` for one (q, n) query block, slab-free;
+        (q,) for one model, (q, F) for stacked fleet weights."""
         raise NotImplementedError
 
     def round_data(self, idx: jnp.ndarray, X: jnp.ndarray):

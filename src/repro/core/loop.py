@@ -13,6 +13,12 @@ schedule of per-round data ``xs``.  ``run_rounds`` is the single driver:
     the final round), records it into a fixed-size history buffer, and
     stops as soon as the metric falls to ``tol``.
 
+``run_rounds_fleet`` is the multi-problem twin (repro.tune, DESIGN.md
+§10): the state carries a leading fleet axis F, the metric is
+per-member, and the while-loop path maintains a vmap-safe per-member
+``done`` mask — converged members are frozen in place and the loop only
+exits when all F members are done.
+
 ``pad_rounds`` removes the old ``H % s == 0`` restriction: the schedule
 is padded to a whole number of s-step rounds and a per-slot validity
 mask rides along, so the final short round computes masked (zero)
@@ -47,7 +53,8 @@ class LoopResult(NamedTuple):
                  it, values may legitimately be inf/nan) or None (scan).
     checks_run:  number of metric evaluations actually performed.
     rounds_run:  number of rounds actually executed.
-    converged:   metric <= tol at some check point.
+    converged:   metric <= tol at some check point (``run_rounds_fleet``:
+                 the (F,) per-member mask; metric_hist is (n_checks, F)).
     """
 
     state: Any
@@ -56,6 +63,14 @@ class LoopResult(NamedTuple):
     checks_run: jnp.ndarray
     rounds_run: jnp.ndarray
     converged: jnp.ndarray
+
+    def metric_history(self) -> Optional[jnp.ndarray]:
+        """The evaluated prefix ``metric_hist[:checks_run]`` (host-side:
+        forces ``checks_run``).  ``None`` when no metric was recorded.
+        Fleet results slice the same way — the check axis leads."""
+        if self.metric_hist is None:
+            return None
+        return self.metric_hist[:int(self.checks_run)]
 
 
 def pad_rounds(schedule: jnp.ndarray, s: int):
@@ -132,3 +147,84 @@ def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
         cond, body, (jnp.asarray(0), state0, hist0, jnp.asarray(0),
                      jnp.asarray(False)))
     return LoopResult(state, None, hist, nchk, k, conv)
+
+
+def run_rounds_fleet(round_fn: Callable, state0: Any, xs: Any, *,
+                     tol: float = NO_TOL, check_every: int = 1,
+                     metric_fn: Optional[Callable] = None) -> LoopResult:
+    """Fleet variant of ``run_rounds``: one round protocol driving F
+    independent problems in lockstep (repro.tune, DESIGN.md §10).
+
+    ``state0`` is a pytree whose leaves carry a leading fleet axis F
+    (e.g. alpha: (F, m)); ``round_fn(state, xs_k) -> state`` advances
+    every member at once (typically a ``jax.vmap``-ed per-member round —
+    leaves of the shared operator stay unbatched, so the gram work is
+    computed ONCE per round for the whole fleet).  ``xs`` is shared
+    across members (one schedule, F problems).
+
+    ``metric_fn(state) -> (F,)`` gives per-member convergence values.
+    The while-loop path keeps a per-member ``done`` mask: members at or
+    below ``tol`` are FROZEN — subsequent rounds compute their update in
+    lockstep but ``jnp.where`` discards it, so a converged member's
+    state never drifts — and the loop exits once every member is done
+    (vmap-safe masking: no data-dependent shapes, no per-member early
+    exit).  ``metric_hist`` is ``(n_checks, F)``; ``converged`` is the
+    final ``(F,)`` mask.
+
+    The scan path (``metric_fn=None``) is the plain lockstep schedule —
+    bit-comparable with F independent ``run_rounds`` scans.
+    """
+    R = jax.tree_util.tree_leaves(xs)[0].shape[0]
+
+    if metric_fn is None:
+        def body(state, x):
+            return round_fn(state, x), 0.0
+
+        state, _ = jax.lax.scan(body, state0, xs)
+        F = jax.tree_util.tree_leaves(state0)[0].shape[0]
+        return LoopResult(state, None, None, jnp.asarray(0),
+                          jnp.asarray(R), jnp.zeros((F,), bool))
+
+    if check_every < 1:
+        raise ValueError(f"check_every must be >= 1, got {check_every}")
+    n_checks = -(-R // check_every)
+    mshape = jax.eval_shape(metric_fn, state0)
+    F = mshape.shape[0]
+    hist0 = jnp.full((n_checks, F), jnp.inf, mshape.dtype)
+    tol_v = jnp.asarray(tol, mshape.dtype)
+
+    def freeze(done, old, new):
+        """Per-member where over a leading-F pytree leaf."""
+        def leaf(o, nw):
+            return jnp.where(done.reshape((F,) + (1,) * (nw.ndim - 1)),
+                             o, nw)
+        return jax.tree_util.tree_map(leaf, old, new)
+
+    def cond(carry):
+        k, _, _, _, done = carry
+        return (k < R) & jnp.logical_not(jnp.all(done))
+
+    def body(carry):
+        k, state, hist, nchk, done = carry
+        x = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, k, 0, keepdims=False),
+            xs)
+        state = freeze(done, state, round_fn(state, x))
+        do_check = ((k + 1) % check_every == 0) | (k + 1 == R)
+
+        def check(args):
+            st, h, n, d = args
+            v = metric_fn(st)                        # (F,)
+            return h.at[n].set(v), n + 1, d | (v <= tol_v)
+
+        def skip(args):
+            return args[1], args[2], args[3]
+
+        hist, nchk, done = jax.lax.cond(do_check, check, skip,
+                                        (state, hist, nchk, done))
+        return k + 1, state, hist, nchk, done
+
+    k, state, hist, nchk, done = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0), state0, hist0, jnp.asarray(0),
+                     jnp.zeros((F,), bool)))
+    return LoopResult(state, None, hist, nchk, k, done)

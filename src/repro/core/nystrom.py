@@ -87,6 +87,13 @@ def kmeans_landmarks(key, A: jnp.ndarray, l: int,
     kmeans++ variant): uniform seeding routinely drops whole clusters —
     duplicated seeds merge and the empty-cluster rule keeps them stale —
     which costs O(sqrt(cluster mass / total)) in kernel error per miss.
+
+    ``key`` is the ONLY source of randomness (it draws the first
+    center; everything after is deterministic), so landmark choice —
+    and with it the whole Nystrom fit — replays exactly from the facade
+    seed: ``SolverOptions.seed`` folds into the landmark key in
+    ``api._build_representation`` just like the schedule key
+    (tests/test_tune.py::test_nystrom_seed_reproducible_end_to_end).
     """
     m = A.shape[0]
     a_sq = jnp.sum(A * A, axis=1)                     # loop-invariant

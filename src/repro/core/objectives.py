@@ -59,6 +59,23 @@ def ksvm_duality_gap(A, y, alpha, cfg: SVMConfig):
         A, y, alpha, cfg)
 
 
+def ksvm_gap_from_Qa(Qa, alpha, C, loss):
+    """Primal + dual gap given ``Qa = (yy^T o K) alpha`` — the ONE place
+    the gap formula (L1/L2 hinge, omega shift) lives.  ``C`` is
+    traceable, so this core is shared by the jitted config-static
+    wrappers below AND the fleet stopper (repro.tune.fleet), which vmaps
+    it over per-member C's."""
+    if loss == L1:
+        Qbar_a = Qa
+        hinge = C * jnp.sum(jnp.maximum(1.0 - Qa, 0.0))
+    else:
+        Qbar_a = Qa + (1.0 / (2.0 * C)) * alpha      # omega = 1/(2C)
+        hinge = C * jnp.sum(jnp.maximum(1.0 - Qa, 0.0) ** 2)
+    dual = 0.5 * alpha @ Qbar_a - jnp.sum(alpha)
+    primal = 0.5 * alpha @ Qa + hinge
+    return primal + dual
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def ksvm_duality_gap_lowrank(Phi, y, alpha, cfg: SVMConfig):
     """Duality gap under the factored kernel ``K~ = Phi Phi^T`` without
@@ -68,15 +85,7 @@ def ksvm_duality_gap_lowrank(Phi, y, alpha, cfg: SVMConfig):
     over Phi computes the identical value at O(m^2) memory)."""
     ya = y * alpha
     Qa = y * (Phi @ (Phi.T @ ya))           # (yy^T Phi Phi^T) alpha
-    Qbar_a = Qa if cfg.loss == L1 else Qa + cfg.omega * alpha
-    dual = 0.5 * alpha @ Qbar_a - jnp.sum(alpha)
-    margins = jnp.maximum(1.0 - Qa, 0.0)
-    if cfg.loss == L1:
-        loss = cfg.C * jnp.sum(margins)
-    else:
-        loss = cfg.C * jnp.sum(margins ** 2)
-    primal = 0.5 * alpha @ Qa + loss
-    return primal + dual
+    return ksvm_gap_from_Qa(Qa, alpha, cfg.C, cfg.loss)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -101,19 +110,26 @@ def relative_solution_error(alpha, alpha_star):
     return jnp.linalg.norm(alpha - alpha_star) / jnp.linalg.norm(alpha_star)
 
 
+def krr_rel_residual_value(A, y, alpha, lam, kernel):
+    """Traceable-lam core of ``krr_rel_residual`` — shared with the
+    fleet stopper (repro.tune.fleet), which vmaps it over per-member
+    lambdas.  Computed slab-free: one ``K @ alpha`` kernel matvec, no
+    m x m gram."""
+    from .kernels import kmv_slab_free
+    m = A.shape[0]
+    Ka = kmv_slab_free(A, A, alpha, kernel)
+    r = y - (Ka / lam + m * alpha)
+    return jnp.linalg.norm(r) / jnp.linalg.norm(y)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def krr_rel_residual(A, y, alpha, cfg: KRRConfig):
     """Relative residual of the K-RR optimality system,
     ``||y - ((1/lam) K + m I) alpha|| / ||y||`` — the closed-form-free
     convergence metric used by the ``repro.api`` tolerance stopper (the
     paper's rel-error needs alpha*, which costs an m x m factorization).
-    Computed slab-free: one ``K @ alpha`` kernel matvec, no m x m gram.
     """
-    from .kernels import kmv_slab_free
-    m = A.shape[0]
-    Ka = kmv_slab_free(A, A, alpha, cfg.kernel)
-    r = y - (Ka / cfg.lam + m * alpha)
-    return jnp.linalg.norm(r) / jnp.linalg.norm(y)
+    return krr_rel_residual_value(A, y, alpha, cfg.lam, cfg.kernel)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

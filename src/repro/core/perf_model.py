@@ -78,12 +78,33 @@ def sstep_bdcd_cost(prob: Problem, mach: Machine, P: int, s: int) -> dict:
 
 
 def best_s(prob: Problem, mach: Machine, P: int,
-           candidates=(1, 2, 4, 8, 16, 32, 64, 128, 256)) -> tuple:
-    """Offline tuning of s (paper 5.2.1): best predicted time."""
-    times = {s: sstep_bdcd_cost(prob, mach, P, s)["time"]
-             for s in candidates}
-    s = min(times, key=times.get)
-    return s, times[s]
+           candidates=(1, 2, 4, 8, 16, 32, 64, 128, 256),
+           hbm_bytes: int = 16 * 2 ** 30, word: int = 4,
+           return_frontier: bool = False) -> tuple:
+    """Offline tuning of s (paper 5.2.1): best predicted time among the
+    FEASIBLE candidates — an s whose per-round KMV working set (the
+    ``m x s*b`` slab bound of ``slab_fits_hbm``) cannot be resident is
+    excluded, so callers (the repro.tune autotuner) never get a plan the
+    memory system cannot execute.  s=1 is always kept as a fallback
+    (the classical schedule's m x b column set is the solver's floor).
+
+    ``return_frontier=True`` additionally returns the searched frontier:
+    ``[{"s", "time", "feasible"}, ...]`` over ALL candidates (infeasible
+    ones carry their modeled time too — the frontier shows what the
+    memory ceiling cost us).
+    """
+    frontier = []
+    for s in candidates:
+        feasible = s == 1 or slab_fits_hbm(prob.m, s * prob.b,
+                                           hbm_bytes, word)
+        frontier.append({"s": s,
+                         "time": sstep_bdcd_cost(prob, mach, P, s)["time"],
+                         "feasible": feasible})
+    feas = [f for f in frontier if f["feasible"]]
+    best = min(feas, key=lambda f: f["time"])
+    if return_frontier:
+        return best["s"], best["time"], frontier
+    return best["s"], best["time"]
 
 
 def storage_words(prob: Problem, P: int, s: int = 1) -> float:
@@ -154,6 +175,55 @@ def modeled_fit_cost(m: int, n: int, kernel: str, *, b: int = 1,
         cost["t_band"] = mach.beta * cost["words"]
         cost["time"] = cost["t_comp"] + cost["t_band"] + cost["t_lat"]
     return cost
+
+
+def fleet_fit_cost(m: int, n: int, kernel: str, F: int, *, b: int = 1,
+                   s: int = 1, iters: int = 1, P: int = 1,
+                   mach: Machine = None, approx: str = None,
+                   landmarks: int = 0) -> dict:
+    """Hockney-model cost of a vmapped F-member solver fleet
+    (repro.tune.solve_fleet, DESIGN.md §10) vs F sequential fits.
+
+    The fleet shares ONE operator, so per round the slab GEMM and its
+    nonlinear epilogue — the paper's dominant terms — are computed once
+    for the whole fleet (under ``jax.vmap`` the operator leaves are
+    unbatched; only the per-member ``U^T alpha_f`` contraction, the
+    O((sb)^2) correction solves, and the state updates batch by F).
+    Sequential fits pay everything F times.  The modeled ratio
+    ``sequential_time / time`` is the fleet speedup ``benchmarks/
+    fig7_sweep.py`` measures.
+    """
+    mach = mach or Machine()
+    single = modeled_fit_cost(m, n, kernel, b=b, s=s, iters=iters, P=P,
+                              mach=mach, approx=approx,
+                              landmarks=landmarks)
+    H = max(iters, 1) if s <= 1 else -(-max(iters, 1) // s) * s
+    rounds = H if s <= 1 else H / s
+    width = max(landmarks, 1) if approx else n
+    mu = 1.0 if approx else _mu(mach, kernel)
+    sb = max(s, 1) * max(b, 1)
+    # shared once per round: slab GEMM + epilogue (+ one-time setup)
+    shared = rounds * (sb * m * width / P + mu * sb * m)
+    setup = single.get("setup_flops", 0.0)
+    # batched per member: U^T alpha (sb*m), the sb^2-scale correction
+    # solves, and the state update
+    per_member = rounds * (sb * m + s * max(b, 1) ** 3
+                           + math.comb(max(s, 1), 2) * max(b, 1) ** 2
+                           + sb * m)
+    flops = shared + setup + F * per_member
+    # the collective payload batches by F only for the contracted
+    # (low-rank / linear) quantities; the pre-epilogue m x sb psum of the
+    # nonlinear exact path is SHARED — same words as a single solve
+    words = single["words"] * (F if approx else 1)
+    msgs = single["msgs"]
+    time = mach.gamma * flops + mach.beta * words + mach.phi * msgs
+    return {"flops": flops, "words": words, "msgs": msgs, "time": time,
+            "t_comp": mach.gamma * flops, "t_band": mach.beta * words,
+            "t_lat": mach.phi * msgs, "F": F, "P": P, "s": s,
+            "iters": iters, "approx": approx,
+            "landmarks": landmarks if approx else 0,
+            "sequential_time": F * single["time"],
+            "modeled_speedup": F * single["time"] / time}
 
 
 def modeled_predict_cost(m: int, n: int, q: int, kernel: str, *,

@@ -83,17 +83,22 @@ def make_sstep_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
                              s: int,
                              gram_fn: Optional[Callable] = None,
                              op_factory: Optional[Callable] = None,
-                             op=None,
+                             op=None, lam=None,
                              ) -> Callable:
     """``round_fn(alpha, (idx, valid)) -> alpha`` for ``loop.run_rounds``:
     one Algorithm-4 outer round; idx: (s, b), valid: (s,).  ``op``
     injects a prebuilt operator (exact or low-rank) over the training
-    representation; the facade builds it once per fit (DESIGN.md §9)."""
+    representation; the facade builds it once per fit (DESIGN.md §9).
+
+    ``lam`` overrides ``cfg.lam`` with a TRACEABLE value — the batched
+    cfg leaf of the fleet solver (repro.tune): vmapping the closure over
+    per-member lam solves a whole regularization grid in lockstep on ONE
+    shared operator (DESIGN.md §10)."""
     if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
         raise ValueError("pass at most one of gram_fn (materialized "
                          "slab), op_factory, or op (prebuilt operator)")
     m = A.shape[0]
-    inv_lam = 1.0 / cfg.lam
+    inv_lam = 1.0 / (cfg.lam if lam is None else lam)
     if op is None and gram_fn is None:
         op = (op_factory or ExactGramOperator)(A, cfg.kernel)
 

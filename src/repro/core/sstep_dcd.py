@@ -79,7 +79,7 @@ def make_sstep_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
                             s: int,
                             gram_fn: Optional[Callable] = None,
                             op_factory: Optional[Callable] = None,
-                            op=None,
+                            op=None, C=None,
                             ) -> Callable:
     """``round_fn(alpha, (idx_s, valid)) -> alpha`` for ``loop.run_rounds``:
     one Algorithm-2 outer round (communication phase + s local solves).
@@ -87,12 +87,18 @@ def make_sstep_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
     ``op`` injects a prebuilt, already ``diag(y)``-scaled training
     operator (``operator.scale_rows(y)``) — exact or low-rank; the
     facade builds it once per fit (DESIGN.md §9).
+
+    ``C`` overrides ``cfg.C`` with a TRACEABLE value — the batched cfg
+    leaf of the fleet solver (repro.tune): vmapping the closure over
+    per-member C's solves a whole C-grid in lockstep on ONE shared
+    operator (DESIGN.md §10).
     """
     if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
         raise ValueError("pass at most one of gram_fn (materialized "
                          "slab), op_factory, or op (prebuilt operator)")
+    from .dcd import _nu_omega
     Atil = y[:, None] * A
-    nu, omega = cfg.nu, cfg.omega
+    nu, omega = _nu_omega(cfg, C)
     if op is None and gram_fn is None:
         op = (op_factory or ExactGramOperator)(Atil, cfg.kernel)
 

@@ -1,0 +1,25 @@
+"""repro.tune — solver fleets, warm-started regularization paths, and
+the perf-model-driven autotuner (DESIGN.md §10).
+
+The paper's experiments are SWEEPS — over s, b, lambda/C, and process
+grids — and hyperparameter search is the dominant real workload for
+kernel methods at scale.  This subsystem turns the single-solve facade
+(repro.api) into a search system:
+
+  * ``solve_fleet``     — F problems, one vmapped computation, one
+                          shared operator (tune/fleet.py);
+  * ``reg_path``        — warm-started regularization ladder,
+                          ``cross_validate`` — k-fold grid search
+                          composing fleet + path (tune/path.py);
+  * ``resolve_options`` — ``SolverOptions(s="auto", b="auto",
+                          layout="auto", approx="auto")`` resolved
+                          through the Hockney perf model, optionally
+                          refined by measured probe rounds, returning a
+                          ``TunedPlan`` (tune/autotune.py).
+"""
+from .autotune import TunedPlan, resolve_options
+from .fleet import FleetResult, solve_fleet
+from .path import CVResult, PathResult, cross_validate, reg_path
+
+__all__ = ["TunedPlan", "resolve_options", "FleetResult", "solve_fleet",
+           "CVResult", "PathResult", "cross_validate", "reg_path"]

@@ -1,0 +1,207 @@
+"""Warm-started regularization paths and k-fold cross-validation
+(DESIGN.md §10).
+
+``reg_path`` solves a regularization ladder SEQUENTIALLY, seeding each
+solve from its neighbour's solution: dual solutions vary continuously in
+the regularizer, so the warm start enters each solve already close to
+optimal and the tolerance stopper exits in a fraction of the cold-start
+rounds.  The ladder runs from strongest to weakest regularization
+(lambda descending; C ascending — 1/C plays lambda's role), the
+direction in which the solution path is best-conditioned.  The
+representation (DESIGN.md §9) is built ONCE and reused by every rung —
+for Nystrom that amortizes the landmark draw, the l x l
+eigendecomposition, and the feature-map GEMM across the whole ladder.
+
+``cross_validate`` composes the two sweep subsystems: per fold it solves
+the full grid as one vmapped fleet (``tune.fleet``) — or, with
+``via="path"``, as one warm-started ladder — then serves every member's
+validation predictions through the SHARED operator in one slab-free
+sweep (``serve_weights``/``serve_block`` accept (m, F)-stacked fleet
+weights), and reports per-fold, per-value scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KRRConfig, SVMConfig
+
+VIAS = ("fleet", "path")
+
+
+@dataclasses.dataclass
+class PathResult:
+    """A solved regularization ladder: ``results[i]`` is the
+    ``FitResult`` at ``values[i]`` (solved order: strongest -> weakest
+    regularization), warm-started from ``results[i-1]``; ``op`` is the
+    shared representation operator (serve any rung through it)."""
+
+    results: List[object]          # FitResult per rung
+    values: np.ndarray             # (F,) ladder, solved order
+    param: str                     # "lam" | "C"
+    problem: str
+    alphas: jnp.ndarray            # (F, m) stacked solutions
+    op: object                     # shared representation operator
+
+    def metric_history(self, i: int):
+        """Rung i's evaluated convergence trajectory."""
+        return self.results[i].metric_history()
+
+    @property
+    def total_iters(self) -> int:
+        """Inner iterations summed over the ladder — the quantity warm
+        starting shrinks vs F independent cold solves."""
+        return int(sum(r.iters_run for r in self.results))
+
+
+def _problem_of(lams, Cs):
+    if (lams is None) == (Cs is None):
+        raise ValueError("pass exactly one of lams= (K-RR) or Cs= (K-SVM)")
+    return ("krr" if Cs is None else "ksvm",
+            np.asarray(lams if Cs is None else Cs, dtype=np.float64))
+
+
+def _ladder(problem, values):
+    """Strongest-to-weakest regularization order (module docstring)."""
+    if np.any(values <= 0.0):
+        raise ValueError("regularization values must be positive")
+    return np.sort(values)[::-1] if problem == "krr" else np.sort(values)
+
+
+def reg_path(A, y, *, lams=None, Cs=None, cfg=None, kernel=None,
+             loss: str = "l1", options=None) -> PathResult:
+    """Warm-started ladder over a lambda grid (K-RR) or C grid (K-SVM);
+    see module docstring.  ``cfg`` (a ``KRRConfig``/``SVMConfig``) fixes
+    the kernel and loss — the facade's ``fit_path`` passes its own;
+    otherwise one is built from ``kernel``/``loss``.  Set
+    ``options.tol`` for the warm starts to pay off: with pure budget
+    stopping every rung runs the full ``max_iters`` regardless."""
+    from repro.api import (SolverOptions, _as_kernel,
+                           _build_representation, _fit)
+
+    problem, values = _problem_of(lams, Cs)
+    ladder = _ladder(problem, values)
+    opts = options or SolverOptions()
+    if cfg is None:
+        cfg = (KRRConfig(lam=1.0, kernel=_as_kernel(kernel))
+               if problem == "krr"
+               else SVMConfig(C=1.0, loss=loss, kernel=_as_kernel(kernel)))
+
+    if opts.needs_autotune:
+        from .autotune import resolve_options
+        plan = resolve_options(A.shape[0], A.shape[1], cfg, opts,
+                               problem=problem, A=A, y=y)
+        opts = plan.options
+
+    rep = _build_representation(A, cfg, opts)
+    results, alpha = [], None
+    for v in ladder:
+        cfg_i = (dataclasses.replace(cfg, lam=float(v))
+                 if problem == "krr"
+                 else dataclasses.replace(cfg, C=float(v)))
+        res, _ = _fit(problem, A, y, cfg_i, opts, a0=alpha, rep=rep)
+        results.append(res)
+        alpha = res.alpha
+    return PathResult(results=results, values=ladder,
+                      param="lam" if problem == "krr" else "C",
+                      problem=problem,
+                      alphas=jnp.stack([r.alpha for r in results]),
+                      op=rep[0])
+
+
+@dataclasses.dataclass
+class CVResult:
+    """k-fold grid search scores.  ``scores[k, f]`` is fold k's
+    validation score at ``values[f]`` (input grid order): MSE for K-RR
+    (lower is better), accuracy for K-SVM (higher is better) — see
+    ``score_name``.  ``best_value``/``best_index`` pick the grid point
+    with the best mean score; ``folds[k]`` keeps fold k's full
+    ``FleetResult``/``PathResult`` (solutions, histories, comm model).
+    """
+
+    scores: np.ndarray             # (k, F)
+    mean_scores: np.ndarray        # (F,)
+    values: np.ndarray             # (F,) grid, input order
+    param: str
+    problem: str
+    score_name: str                # "mse" | "accuracy"
+    best_index: int
+    best_value: float
+    folds: List[object]
+
+
+def _fold_indices(m: int, n_folds: int, seed: int):
+    perm = np.random.RandomState(seed).permutation(m)
+    return np.array_split(perm, n_folds)
+
+
+def _score_members(problem, op, alpha_F, values, A_tr, y_tr, A_val,
+                   y_val):
+    """All F members' validation scores in ONE slab-free serving sweep:
+    the shared operator takes the (m, F)-stacked weights through
+    ``serve_weights``/``serve_block`` (one KMV for the whole grid)."""
+    W = alpha_F.T                                     # (m_tr, F)
+    if problem == "ksvm":
+        W = W * y_tr[:, None]
+    sw = op.serve_weights(W)
+    preds = op.serve_block(jnp.asarray(A_val), sw)    # (q, F)
+    if problem == "krr":
+        preds = preds / jnp.asarray(values, preds.dtype)[None, :]
+        err = preds - jnp.asarray(y_val)[:, None]
+        return np.asarray(jnp.mean(err * err, axis=0))
+    hit = jnp.sign(preds) == jnp.asarray(y_val)[:, None]
+    return np.asarray(jnp.mean(hit.astype(jnp.float32), axis=0))
+
+
+def cross_validate(A, y, *, lams=None, Cs=None, kernel=None,
+                   loss: str = "l1", options=None, folds: int = 5,
+                   via: str = "fleet", seed: int = 0) -> CVResult:
+    """k-fold grid search over a regularization grid; see module
+    docstring.  ``via="fleet"`` solves each fold's grid as one vmapped
+    fleet; ``via="path"`` as one warm-started ladder."""
+    from .fleet import solve_fleet
+
+    if via not in VIAS:
+        raise ValueError(f"via must be one of {VIAS}, got {via!r}")
+    if not isinstance(folds, int) or folds < 2:
+        raise ValueError(f"folds must be an int >= 2, got {folds!r}")
+    problem, values = _problem_of(lams, Cs)
+    m = A.shape[0]
+    if folds > m:
+        raise ValueError(f"folds={folds} exceeds m={m}")
+
+    A_h, y_h = np.asarray(A), np.asarray(y)
+    scores, fold_results = [], []
+    for val_idx in _fold_indices(m, folds, seed):
+        tr_mask = np.ones(m, bool)
+        tr_mask[val_idx] = False
+        A_tr = jnp.asarray(A_h[tr_mask])
+        y_tr = jnp.asarray(y_h[tr_mask])
+        A_val, y_val = A_h[val_idx], y_h[val_idx]
+        kw = ({"lams": values} if problem == "krr" else {"Cs": values})
+        if via == "fleet":
+            fr = solve_fleet(A_tr, y_tr, kernel=kernel, loss=loss,
+                             options=options, **kw)
+            alpha_F, op, order = fr.alpha, fr.op, values
+        else:
+            fr = reg_path(A_tr, y_tr, kernel=kernel, loss=loss,
+                          options=options, **kw)
+            # ladder order -> input grid order
+            pos = {float(v): i for i, v in enumerate(fr.values)}
+            sel = jnp.asarray([pos[float(v)] for v in values])
+            alpha_F, op, order = fr.alphas[sel], fr.op, values
+        fold_results.append(fr)
+        scores.append(_score_members(problem, op, alpha_F, order,
+                                     A_tr, y_tr, A_val, y_val))
+    scores = np.stack(scores)                        # (k, F)
+    mean = scores.mean(axis=0)
+    best = int(np.argmin(mean) if problem == "krr" else np.argmax(mean))
+    return CVResult(scores=scores, mean_scores=mean, values=values,
+                    param="lam" if problem == "krr" else "C",
+                    problem=problem,
+                    score_name="mse" if problem == "krr" else "accuracy",
+                    best_index=best, best_value=float(values[best]),
+                    folds=fold_results)

@@ -105,7 +105,7 @@ def main():
         res = KernelRidge(lam=1.0, kernel=KernelConfig("rbf"),
                           options=opts).fit(A, y)
         print(f"api krr {layout} tol-stop: converged={res.converged} "
-              f"iters={res.iters_run} metric={res.history[-1]:.3e}")
+              f"iters={res.iters_run} metric={res.metric_history()[-1]:.3e}")
         if not (res.converged and res.iters_run < 400):
             failures.append(f"api krr {layout} tol")
 

@@ -113,10 +113,11 @@ def test_krr_tol_stops_every_variant(krr_data, method, layout):
     assert res.converged
     assert res.iters_run < 800
     assert res.metric == "rel_residual"
-    assert res.history is not None and len(res.history) >= 1
+    hist = res.metric_history()
+    assert hist is not None and len(hist) >= 1
     # reported history decreases overall and ends at/below tol
-    assert res.history[-1] <= 5e-2
-    assert res.history[-1] <= res.history[0]
+    assert hist[-1] <= 5e-2
+    assert hist[-1] <= hist[0]
 
 
 @pytest.mark.parametrize("layout", LAYOUTS)
@@ -125,13 +126,13 @@ def test_ksvm_tol_stops(svm_data, layout):
     # pick a reachable gap threshold: the gap after a full H run
     opts0 = SolverOptions(method="sstep", s=S, max_iters=256, record=True)
     base = KernelSVM(C=1.0, kernel="rbf", options=opts0).fit(A, y)
-    target = float(base.history[-1]) * 1.05
+    target = float(base.metric_history()[-1]) * 1.05
     opts = SolverOptions(method="sstep", s=S, layout=layout, tol=target,
                          check_every=2, max_iters=1024)
     res = KernelSVM(C=1.0, kernel="rbf", options=opts).fit(A, y)
     assert res.converged and res.iters_run < 1024
     assert res.metric == "duality_gap"
-    assert res.history[-1] <= target
+    assert res.metric_history()[-1] <= target
 
 
 def test_record_without_tol_runs_full_budget(krr_data):
@@ -142,8 +143,9 @@ def test_record_without_tol_runs_full_budget(krr_data):
     assert not res.converged
     assert res.iters_run == H
     n_rounds = -(-H // S)
-    assert len(res.history) == -(-n_rounds // 2)
-    assert res.history[-1] <= res.history[0]
+    hist = res.metric_history()
+    assert len(hist) == -(-n_rounds // 2)
+    assert hist[-1] <= hist[0]
 
 
 # ---------------------------------------------------------------------------

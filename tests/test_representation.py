@@ -351,7 +351,7 @@ class TestFacadeNystrom:
                              landmarks=64)
         res = KernelSVM(C=1.0, kernel=KERN, options=opts).fit(A, y)
         assert res.converged
-        assert res.history[-1] <= 1e-3
+        assert res.metric_history()[-1] <= 1e-3
 
     def test_tol_stopping_under_approx(self, krr_data):
         """The stopping metric is evaluated under the SAME approximate
@@ -362,4 +362,4 @@ class TestFacadeNystrom:
                              landmarks=80)
         res = KernelRidge(lam=1.0, kernel=KERN, options=opts).fit(A, y)
         assert res.converged
-        assert res.history[-1] <= 1e-4
+        assert res.metric_history()[-1] <= 1e-4
