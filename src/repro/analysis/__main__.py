@@ -1,0 +1,46 @@
+"""``python -m repro.analysis`` — run the static analyzers and exit
+nonzero on any unsuppressed finding (the blocking CI entry point).
+
+    python -m repro.analysis                 # all three analyzers
+    python -m repro.analysis --only pallas   # subset
+    python -m repro.analysis --list-checks   # the check catalog
+    python -m repro.analysis --json          # machine-readable findings
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+from . import ANALYZERS, CHECKS, render_report, run_all
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Pallas sanitizer + jit lint + collective auditor")
+    ap.add_argument("--only", action="append", choices=ANALYZERS,
+                    help="run a subset (repeatable)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON instead of the report")
+    ap.add_argument("--list-checks", action="store_true",
+                    help="print the check catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_checks:
+        for check, (analyzer, sev, what) in sorted(CHECKS.items()):
+            print(f"{check:12s} {analyzer:7s} {sev:8s} {what}")
+        return 0
+
+    findings = run_all(only=args.only)
+    if args.json:
+        print(json.dumps([dataclasses.asdict(f) for f in findings],
+                         indent=2))
+    else:
+        print(render_report(findings))
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,193 @@
+"""Static s-step collective auditor (DESIGN.md §11).
+
+The paper's headline invariant is STRUCTURAL: the s-step variants run
+the identical update in exact arithmetic while communicating every s
+steps instead of every step — H iterations cost ceil(H/s) rounds of
+messages.  ``perf_model`` prices that schedule; this module asserts the
+code actually implements it, by tracing every distributed solver x
+layout x (classical, s-step) x kernel combination to a jaxpr and
+running ``launch.jaxpr_analysis.collective_census`` over it:
+
+* CHK-COMM (error) — total collective EXECUTIONS (scan trip counts
+  multiplied through) != rounds x ``perf_model.round_collectives``
+  + ``perf_model.setup_collectives``, where rounds comes from the same
+  Hockney model term (``modeled_fit_cost``'s message count at P=1)
+  the autotuner prices with.  An extra psum in a round-fn closure or a
+  collective that silently left the scan body fails this count.
+* CHK-AXIS (error) — a collective communicating over an axis name the
+  shard_map mesh does not define (it would crash at run time on a real
+  mesh; at trace time over a 1x1 mesh it silently no-ops).
+* CHK-SSTEP (error) — for each solver/layout/kernel, per-round
+  collective executions of the s-step trace != classical / s: the
+  paper's communication-avoidance claim itself.
+
+Tracing happens on a 1x1 ("data", "model") mesh — the census counts
+collective SITES x trip counts, which are mesh-size-invariant, so one
+device audits the schedule of any P.  Findings anchor to the traced
+solver's ``def`` line in ``core/distributed.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import math
+import os
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import make_mesh_auto
+from repro.core import distributed as dist
+from repro.core.bdcd import KRRConfig
+from repro.core.dcd import SVMConfig
+from repro.core.kernels import KernelConfig
+from repro.core.perf_model import (modeled_fit_cost, round_collectives,
+                                   setup_collectives)
+from repro.launch.jaxpr_analysis import CollectiveUse, collective_census
+
+from .findings import ERROR, Finding
+
+M, N, H, B, S = 32, 16, 16, 2, 4          # trace-problem concretization
+
+SOLVERS = {
+    ("ksvm", "1d"): dist.dist_sstep_dcd_ksvm,
+    ("ksvm", "2d"): dist.dist_sstep_dcd_ksvm_2d,
+    ("krr", "1d"): dist.dist_sstep_bdcd_krr,
+    ("krr", "2d"): dist.dist_sstep_bdcd_krr_2d,
+}
+KERNEL_NAMES = ("linear", "rbf")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommCase:
+    """One audited trace point."""
+
+    problem: str          # "ksvm" | "krr"
+    layout: str           # "1d" | "2d"
+    mode: str             # "classical" | "sstep"
+    kernel: str           # "linear" | "rbf"
+
+    @property
+    def s(self) -> int:
+        return 1 if self.mode == "classical" else S
+
+    @property
+    def rounds(self) -> int:
+        return math.ceil(H / self.s)
+
+
+CASES: Tuple[CommCase, ...] = tuple(
+    CommCase(p, l, m, k)
+    for (p, l) in SOLVERS
+    for m in ("classical", "sstep")
+    for k in KERNEL_NAMES)
+
+
+def _cfg(case: CommCase):
+    kern = KernelConfig(case.kernel)
+    if case.problem == "ksvm":
+        return SVMConfig(C=1.0, loss="l1", kernel=kern)
+    return KRRConfig(lam=1.0, kernel=kern)
+
+
+def trace_case(case: CommCase) -> Tuple[CollectiveUse, ...]:
+    """Trace the case's solver on a 1x1 mesh and return its census."""
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
+    fn = SOLVERS[(case.problem, case.layout)]
+    cfg = _cfg(case)
+    A = jnp.zeros((M, N), jnp.float32)
+    y = jnp.ones((M,), jnp.float32)
+    a0 = jnp.zeros((M,), jnp.float32)
+    sched = jnp.zeros((H,) if case.problem == "ksvm" else (H, B),
+                      jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda A, y, a0, sc: fn(mesh, A, y, a0, sc, cfg, s=case.s))(
+            A, y, a0, sched)
+    return collective_census(jaxpr)
+
+
+def expected_executions(case: CommCase) -> int:
+    """The model's count: per-round collectives x the Hockney message
+    rounds (``modeled_fit_cost`` msgs at P=1 — one message per round)
+    plus the loop-invariant setup collectives (RBF row sqnorms)."""
+    b = B if case.problem == "krr" else 1
+    rounds = int(modeled_fit_cost(M, N, case.kernel, b=b, s=case.s,
+                                  iters=H, P=1)["msgs"])
+    assert rounds == case.rounds, (rounds, case)
+    return (rounds * round_collectives(case.layout, case.kernel)
+            + setup_collectives(case.layout, case.kernel))
+
+
+def _anchor(case: CommCase) -> Tuple[str, int]:
+    fn = SOLVERS[(case.problem, case.layout)]
+    return (os.path.abspath(inspect.getsourcefile(fn)),
+            inspect.getsourcelines(fn)[1])
+
+
+def audit_case(case: CommCase, census=None) -> List[Finding]:
+    """CHK-COMM + CHK-AXIS for one trace point (``census`` injectable
+    for fixture tests)."""
+    census = trace_case(case) if census is None else census
+    path, line = _anchor(case)
+    label = f"{case.problem}/{case.layout}/{case.mode}/{case.kernel}"
+    out: List[Finding] = []
+
+    total = sum(u.executions for u in census)
+    want = expected_executions(case)
+    if total != want:
+        sites = [(u.prim, u.axes, u.executions) for u in census]
+        out.append(Finding(
+            "CHK-COMM", ERROR, path, line,
+            f"{label}: traced {total} collective executions, model says "
+            f"{want} ({case.rounds} rounds x "
+            f"{round_collectives(case.layout, case.kernel)} + "
+            f"{setup_collectives(case.layout, case.kernel)} setup) — "
+            f"census: {sites}"))
+
+    mesh_axes = {"data", "model"}
+    for u in census:
+        bad = [a for a in u.axes if a not in mesh_axes]
+        if bad:
+            out.append(Finding(
+                "CHK-AXIS", ERROR, path, line,
+                f"{label}: {u.prim} over unknown mesh axis name(s) "
+                f"{bad} — the shard_map mesh defines {sorted(mesh_axes)}"))
+    return out
+
+
+def _per_round(case: CommCase, census) -> float:
+    """Collective executions attributable to rounds (setup removed),
+    divided by the round count."""
+    total = sum(u.executions for u in census)
+    return (total - setup_collectives(case.layout, case.kernel)) \
+        / case.rounds
+
+
+def audit() -> List[Finding]:
+    findings: List[Finding] = []
+    per_round = {}
+    for case in CASES:
+        census = trace_case(case)
+        findings.extend(audit_case(case, census))
+        per_round[(case.problem, case.layout, case.kernel,
+                   case.mode)] = _per_round(case, census)
+
+    # the paper's claim: per H iterations, s-step communicates 1/s as
+    # often as classical — equal per-ROUND cost, rounds reduced by s
+    for (p, l) in SOLVERS:
+        for k in KERNEL_NAMES:
+            cl = per_round[(p, l, k, "classical")]
+            ss = per_round[(p, l, k, "sstep")]
+            if cl != ss:
+                path, line = _anchor(CommCase(p, l, "sstep", k))
+                findings.append(Finding(
+                    "CHK-SSTEP", ERROR, path, line,
+                    f"{p}/{l}/{k}: s-step trace runs {ss} collectives "
+                    f"per round vs classical {cl} — total executions "
+                    f"per {H} iterations must equal classical/{S}"))
+    return findings
+
+
+def run() -> List[Finding]:
+    return audit()

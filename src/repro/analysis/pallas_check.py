@@ -1,0 +1,163 @@
+"""Pallas kernel sanitizer (DESIGN.md §11).
+
+Enumerates every registered ``pl.pallas_call`` launch's BlockSpec index
+maps over the CONCRETE grid and checks the properties the TPU pipeline
+assumes but never verifies:
+
+* CHK-RACE (error) — an output block written from more than one
+  distinct projection onto the PARALLEL grid axes.  Parallel axes may
+  execute concurrently (and on real hardware, on different cores), so
+  two parallel grid points landing on the same out block is a write
+  race; revisits that differ only along "arbitrary" (sequential) axes
+  are the legal accumulate-in-scratch pattern and are not flagged.
+* CHK-HOLE (error) — an output block no grid point ever writes: the
+  kernel silently returns uninitialized HBM for that tile.
+* CHK-ALIGN (warning) — a block shape violating the dtype-aware
+  sublane/lane tiling ((8, 128) f32, (16, 128) bf16 — the same
+  round-up ``kernels/gram.py`` applies); misaligned blocks force the
+  mosaic compiler into relayouts or fail outright on hardware even
+  when interpret=True passes.
+* CHK-VMEM (warning) — the double-buffered working set (in + out
+  blocks twice, plus scratch) priced by ``perf_model`` exceeds the
+  16 MB/core VMEM budget: the launch cannot pipeline on hardware.
+* CHK-SITE (warning) — a ``pallas_call`` site discovered by the AST
+  walk that no registered entry point exercises: the sanitizer is
+  blind to it (fix by registering it in ``registry.ENTRY_POINTS``).
+
+Findings anchor to the ``pallas_call`` expression's line, so
+suppressions sit next to the launch they waive.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Set, Tuple
+
+from repro.core.perf_model import (VMEM_BYTES, pallas_working_set_bytes,
+                                   vmem_fits)
+from repro.kernels.gram import _sublane
+
+from .findings import ERROR, WARNING, Finding
+from .registry import (CapturedCall, capture_entry_points, discover_sites)
+
+LANE = 128
+GRID_ENUM_CAP = 1 << 20
+
+
+def _grid_points(grid: Tuple[int, ...]):
+    pts = [()]
+    for extent in grid:
+        pts = [p + (i,) for p in pts for i in range(extent)]
+    return pts
+
+
+def _as_index(idx) -> Tuple[int, ...]:
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(i) for i in idx)
+
+
+def _check_out_spec(call: CapturedCall, k: int, spec) -> List[Finding]:
+    out: List[Finding] = []
+    sem = call.dimension_semantics or ("arbitrary",) * len(call.grid)
+    par_axes = [a for a, s in enumerate(sem) if s == "parallel"]
+    if spec.index_map is None or math.prod(call.grid) > GRID_ENUM_CAP:
+        return out
+
+    writes: Dict[Tuple[int, ...], Set[Tuple[int, ...]]] = {}
+    for pt in _grid_points(call.grid):
+        block = _as_index(spec.index_map(*pt))
+        proj = tuple(pt[a] for a in par_axes)
+        writes.setdefault(block, set()).add(proj)
+
+    where = f"{call.function} out spec #{k}"
+    for block, projs in sorted(writes.items()):
+        if len(projs) > 1:
+            out.append(Finding(
+                "CHK-RACE", ERROR, call.path, call.line,
+                f"{where}: block {block} written from {len(projs)} "
+                f"distinct parallel-axis points (e.g. "
+                f"{sorted(projs)[:2]}) — concurrent grid points race "
+                f"on the same output tile"))
+
+    expected = set(_grid_points(tuple(
+        -(-d // b) for d, b in zip(spec.array_shape, spec.block_shape))))
+    holes = sorted(expected - set(writes))
+    if holes:
+        out.append(Finding(
+            "CHK-HOLE", ERROR, call.path, call.line,
+            f"{where}: {len(holes)} of {len(expected)} output blocks "
+            f"never written (first: {holes[0]}) — those tiles return "
+            f"uninitialized memory"))
+    return out
+
+
+def _check_alignment(call: CapturedCall) -> List[Finding]:
+    out: List[Finding] = []
+    for role, specs in (("in", call.in_specs), ("out", call.out_specs)):
+        for k, spec in enumerate(specs):
+            if len(spec.block_shape) < 2:
+                continue
+            sub = _sublane(spec.dtype)
+            lane_d, sub_d = spec.block_shape[-1], spec.block_shape[-2]
+            bad = []
+            if lane_d % LANE and lane_d != spec.array_shape[-1]:
+                bad.append(f"lane dim {lane_d} % {LANE} != 0")
+            if sub_d % sub and sub_d != 1 \
+                    and sub_d != spec.array_shape[-2]:
+                bad.append(f"sublane dim {sub_d} % {sub} != 0")
+            if bad:
+                out.append(Finding(
+                    "CHK-ALIGN", WARNING, call.path, call.line,
+                    f"{call.function} {role} spec #{k}: block "
+                    f"{spec.block_shape} ({jnp_name(spec.dtype)}) — "
+                    + "; ".join(bad)
+                    + f" (TPU tiles are ({sub}, {LANE}) for this dtype)"))
+    return out
+
+
+def jnp_name(dtype) -> str:
+    import jax.numpy as jnp
+    return jnp.dtype(dtype).name
+
+
+def _check_vmem(call: CapturedCall) -> List[Finding]:
+    blocks = call.block_bytes()
+    if vmem_fits(blocks, call.scratch_bytes):
+        return []
+    ws = pallas_working_set_bytes(blocks, call.scratch_bytes)
+    return [Finding(
+        "CHK-VMEM", WARNING, call.path, call.line,
+        f"{call.function}: double-buffered working set {ws} B "
+        f"({blocks} B blocks x2 + {call.scratch_bytes} B scratch) "
+        f"exceeds the {VMEM_BYTES} B VMEM budget — the launch cannot "
+        f"pipeline on hardware")]
+
+
+def analyze_calls(calls: Sequence[CapturedCall]) -> List[Finding]:
+    """All per-launch checks over already-captured calls (the test
+    fixtures enter here; ``run`` adds capture + site coverage)."""
+    findings: List[Finding] = []
+    seen = set()
+    for call in calls:
+        for f in (_check_alignment(call) + _check_vmem(call)
+                  + [f for k, spec in enumerate(call.out_specs)
+                     for f in _check_out_spec(call, k, spec)]):
+            key = (f.check, f.path, f.line, f.message)
+            if key not in seen:       # gram runs once per dtype entry
+                seen.add(key)
+                findings.append(f)
+    return findings
+
+
+def run() -> List[Finding]:
+    calls = capture_entry_points()
+    findings = analyze_calls(calls)
+    covered = {c.site for c in calls}
+    for path, line in discover_sites():
+        if (path, line) not in covered:
+            findings.append(Finding(
+                "CHK-SITE", WARNING, path, line,
+                "pallas_call site not exercised by any registered "
+                "entry point — register it in "
+                "repro.analysis.registry.ENTRY_POINTS"))
+    return findings

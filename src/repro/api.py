@@ -196,6 +196,9 @@ class SolverOptions:
         return self.s
 
 
+# repro: noqa[CHK-PYTREE] host-side result record — fit() returns it to
+#   the caller after every jit boundary has been crossed; it is never
+#   passed back into a traced function.
 @dataclasses.dataclass
 class FitResult:
     """Everything ``fit`` observed: the solution, the convergence

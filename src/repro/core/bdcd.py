@@ -86,6 +86,9 @@ def make_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
     return round_fn
 
 
+# repro: noqa[CHK-STATIC] gram_fn/op_factory are module-level functions
+#   (or None) at every call site; passing a fresh closure retraces by
+#   design — it is the documented parity-oracle escape hatch.
 @partial(jax.jit, static_argnames=("cfg", "record_every", "gram_fn",
                                    "op_factory"))
 def bdcd_krr(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,

@@ -292,3 +292,66 @@ def slab_fits_hbm(m: int, sb: int, hbm_bytes: int = 16 * 2 ** 30,
     (A's own footprint is not counted, so this is an optimistic bound) —
     the slab-free path has no such ceiling on m."""
     return word * m * sb < hbm_bytes
+
+
+# --------------------------------------------------------------------------
+# Structural comm model (DESIGN.md §11): COUNTS of collectives, not bytes.
+# The Hockney L term above prices one latency unit per round; these two
+# expose the underlying per-round collective schedule as checkable
+# integers, so the static comm auditor (repro.analysis.comm_check) can
+# assert the traced jaxpr executes EXACTLY the modeled schedule — the
+# paper's H/s communication-round claim as a machine-checked invariant.
+# --------------------------------------------------------------------------
+
+def round_collectives(layout: str, kernel: str) -> int:
+    """Collectives per OUTER ROUND of the slab-free solvers by layout.
+
+    serial: 0.  1d: ONE model-axis psum per round regardless of kernel
+    (linear psums the contracted (sb, sb+1) words, nonlinear the
+    pre-epilogue m x sb block with the cross terms riding along — see
+    ``core.distributed.AllreduceGramOperator``).  2d: three — the
+    sampled-row gather over ``data``, the fused ``model`` reduction, and
+    the fused contracted-quantities psum back over ``data``
+    (``dist_sstep_*_2d`` docstrings).  The classical solvers are the
+    s=1 specialization: SAME per-round counts, s times the rounds.
+    """
+    if layout not in ("serial", "1d", "2d"):
+        raise ValueError(f"unknown layout {layout!r}")
+    return {"serial": 0, "1d": 1, "2d": 3}[layout]
+
+
+def setup_collectives(layout: str, kernel: str) -> int:
+    """One-time (loop-invariant) collectives per solve: the psummed RBF
+    row squared-norms (``_psummed_row_sqnorms``) — hoisted out of the
+    round loop precisely so they don't scale with H.  Zero for linear
+    and polynomial kernels (no row-norm term) and for serial runs."""
+    if layout == "serial":
+        return 0
+    return 1 if kernel == "rbf" else 0
+
+
+# --------------------------------------------------------------------------
+# VMEM working-set model: prices a Pallas kernel's on-chip footprint so
+# the kernel sanitizer (repro.analysis.pallas_check) can flag launches
+# whose pipelined blocks + scratch cannot be VMEM-resident.
+# --------------------------------------------------------------------------
+
+VMEM_BYTES = 16 * 2 ** 20          # per-core VMEM (TPU v4/v5 class)
+
+
+def pallas_working_set_bytes(block_bytes: int, scratch_bytes: int = 0,
+                             double_buffer: bool = True) -> int:
+    """On-chip bytes a Pallas launch keeps live: the in/out block set —
+    DOUBLED by default, because the pipelined grid prefetches the next
+    block of every spec while the current one computes — plus scratch
+    (scratch is persistent across grid steps, never double-buffered)."""
+    mult = 2 if double_buffer else 1
+    return mult * block_bytes + scratch_bytes
+
+
+def vmem_fits(block_bytes: int, scratch_bytes: int = 0,
+              vmem_bytes: int = VMEM_BYTES,
+              double_buffer: bool = True) -> bool:
+    """Whether the working set fits the VMEM budget."""
+    return pallas_working_set_bytes(
+        block_bytes, scratch_bytes, double_buffer) <= vmem_bytes

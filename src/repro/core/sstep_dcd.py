@@ -120,6 +120,9 @@ def make_sstep_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
     return round_fn
 
 
+# repro: noqa[CHK-STATIC] gram_fn/op_factory are module-level functions
+#   (or None) at every call site; passing a fresh closure retraces by
+#   design — it is the documented parity-oracle escape hatch.
 @partial(jax.jit, static_argnames=("cfg", "s", "record_rounds", "gram_fn",
                                    "op_factory"))
 def sstep_dcd_ksvm(A: jnp.ndarray, y: jnp.ndarray, alpha0: jnp.ndarray,

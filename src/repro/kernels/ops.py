@@ -4,8 +4,17 @@
 (Python-evaluated kernel body — bit-identical control flow) elsewhere, so
 the same call sites run everywhere.  Pass ``force_ref=True`` to get the
 pure-jnp oracle (used by tests and as the XLA-fusion baseline in §Perf).
+
+``REPRO_SANITIZE=1`` in the environment forces interpret mode EVERYWHERE
+(TPU included): the kernel bodies run under the Python evaluator, where
+out-of-bounds block reads and NaN/Inf propagation are observable — the
+runtime half of the ``repro.analysis`` sanitizer (the pytest fixture in
+``tests/conftest.py`` adds ``jax_debug_nans``/``jax_debug_infs`` on top
+for the kernel test modules).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -19,10 +28,20 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def sanitize_mode() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") == "1"
+
+
+def _interpret(explicit=None) -> bool:
+    if sanitize_mode():
+        return True
+    return (not on_tpu()) if explicit is None else explicit
+
+
 def gram(A, B, cfg: KernelConfig, *, force_ref: bool = False, **tiles):
     if force_ref:
         return gram_ref(A, B, cfg)
-    return gram_pallas(A, B, cfg, interpret=not on_tpu(), **tiles)
+    return gram_pallas(A, B, cfg, interpret=_interpret(), **tiles)
 
 
 def kmv(A, B, X, cfg: KernelConfig, *, force_ref: bool = False, **tiles):
@@ -31,7 +50,7 @@ def kmv(A, B, X, cfg: KernelConfig, *, force_ref: bool = False, **tiles):
     the slab (oracle / XLA-fusion baseline)."""
     if force_ref:
         return kmv_ref(A, B, X, cfg)
-    return kmv_pallas(A, B, X, cfg, interpret=not on_tpu(), **tiles)
+    return kmv_pallas(A, B, X, cfg, interpret=_interpret(), **tiles)
 
 
 def sdpa_flash(q, k, v, causal=True, interpret=None, bq=256, bk=256):
@@ -41,7 +60,7 @@ def sdpa_flash(q, k, v, causal=True, interpret=None, bq=256, bk=256):
     B, S, H, hd = q.shape
     T = k.shape[1]
     hdv = v.shape[-1]
-    interp = (not on_tpu()) if interpret is None else interpret
+    interp = _interpret(interpret)
     qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
     kt = k.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
     vt = v.transpose(0, 2, 1, 3).reshape(B * H, T, hdv)
@@ -71,7 +90,7 @@ def make_solver_op_factory(use_pallas: bool = True, interpret=None,
     ``use_pallas`` is False."""
     if not use_pallas:
         return None
-    interp = (not on_tpu()) if interpret is None else interpret
+    interp = _interpret(interpret)
 
     def matvec_impl(A, B, X, cfg):
         return kmv_pallas(A, B, X, cfg, interpret=interp,
@@ -86,5 +105,4 @@ def make_solver_op_factory(use_pallas: bool = True, interpret=None,
 def rmsnorm(x, scale, eps: float = 1e-6, interpret=None):
     """Fused RMSNorm (TPU Pallas; interpret-mode elsewhere)."""
     from .rmsnorm import rmsnorm_pallas
-    interp = (not on_tpu()) if interpret is None else interpret
-    return rmsnorm_pallas(x, scale, eps=eps, interpret=interp)
+    return rmsnorm_pallas(x, scale, eps=eps, interpret=_interpret(interpret))

@@ -2,31 +2,86 @@
 step, with scan trip counts multiplied through (unlike HLO text, where a
 while body appears once).  This is the paper's 'messages' (latency) term
 for an arbitrary jax program — used to verify the s-step schedules
-structurally."""
+structurally.
+
+``collective_census`` is the assertion-grade variant consumed by
+``repro.analysis.comm_check`` (DESIGN.md §11): it returns one row per
+collective *site* — primitive name, the mesh axis names it reduces
+over, and how many times the site executes (scan trip counts
+multiplied through) — so the static comm auditor can check both the
+execution count against ``perf_model``'s modeled message terms and the
+axis names against the ``shard_map`` mesh.
+"""
 from __future__ import annotations
 
-import jax
+from typing import NamedTuple, Tuple
 
-COLLECTIVE_PRIMS = {"psum", "all_gather", "reduce_scatter", "all_to_all",
-                    "ppermute", "psum_invariant", "pmax", "pmin"}
+# Collective primitives by jaxpr name.  Beyond the core set, this covers
+# the manual-sharding / vma variants (``psum_invariant``,
+# ``all_gather_invariant``, ``pbroadcast``) and the async start/done
+# split forms some lowering paths emit, so a schedule that smuggles a
+# collective through any spelling is still counted.
+COLLECTIVE_PRIMS = frozenset({
+    "psum", "all_gather", "reduce_scatter", "all_to_all", "ppermute",
+    "psum_invariant", "pmax", "pmin",
+    "pbroadcast", "all_gather_invariant", "psum2",
+    "all_gather_start", "all_gather_done",
+    "all_reduce_start", "all_reduce_done",
+    "reduce_scatter_start", "reduce_scatter_done",
+    "collective_permute_start", "collective_permute_done",
+})
 
 
-def count_collective_executions(jaxpr, _mult: int = 1) -> int:
-    """jaxpr: a ClosedJaxpr (e.g. jax.make_jaxpr(f)(*args))."""
+class CollectiveUse(NamedTuple):
+    """One collective site in a jaxpr: ``prim`` (primitive name),
+    ``axes`` (mesh axis NAMES it communicates over; positional/int axes
+    are dropped), ``executions`` (how many times the site runs per call,
+    scan trip counts multiplied through)."""
+
+    prim: str
+    axes: Tuple[str, ...]
+    executions: int
+
+
+def _axis_names(params) -> Tuple[str, ...]:
+    """Mesh axis names from a collective eqn's params (``axes`` for psum
+    and friends, ``axis_name`` for gather/permute-style primitives);
+    either may be a bare name or a tuple, and psum axes may include
+    POSITIONAL (int) entries — only named axes talk to the network."""
+    ax = params.get("axes", params.get("axis_name", ()))
+    if not isinstance(ax, (tuple, list)):
+        ax = (ax,)
+    return tuple(a for a in ax if isinstance(a, str))
+
+
+def collective_census(jaxpr, _mult: int = 1) -> Tuple[CollectiveUse, ...]:
+    """Every collective site in ``jaxpr`` (a ClosedJaxpr, e.g.
+    ``jax.make_jaxpr(f)(*args)``) with its per-call execution count.
+
+    Scan trip counts multiply through (a psum inside a length-R
+    ``lax.scan`` executes R times); while-loop bodies count ONCE (their
+    trip count is data-dependent — the census is a static lower bound,
+    exact for the scan-based round loops the solvers actually use).
+    """
     core_jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
-    total = 0
+    rows = []
     for eqn in core_jaxpr.eqns:
         name = eqn.primitive.name
         mult = _mult
         if name == "scan":
             mult *= int(eqn.params.get("length", 1))
         if name in COLLECTIVE_PRIMS:
-            total += _mult
+            rows.append(CollectiveUse(name, _axis_names(eqn.params), _mult))
             continue
         # recurse into sub-jaxprs (scan/while/cond/pjit/shard_map/remat...)
         for sub in _sub_jaxprs(eqn):
-            total += count_collective_executions(sub, mult)
-    return total
+            rows.extend(collective_census(sub, mult))
+    return tuple(rows)
+
+
+def count_collective_executions(jaxpr, _mult: int = 1) -> int:
+    """Total collective executions in a ClosedJaxpr (census summed)."""
+    return sum(u.executions for u in collective_census(jaxpr, _mult))
 
 
 def _sub_jaxprs(eqn):

@@ -52,6 +52,8 @@ from repro.core.perf_model import fleet_fit_cost
 FLEET_LAYOUTS = ("serial", "1d")
 
 
+# repro: noqa[CHK-PYTREE] host-side result record assembled AFTER the
+#   jitted fleet chunks return; never re-enters a traced function.
 @dataclasses.dataclass
 class FleetResult:
     """Everything ``solve_fleet`` observed, fleet-wide.

@@ -32,6 +32,8 @@ from repro.core import KRRConfig, SVMConfig
 VIAS = ("fleet", "path")
 
 
+# repro: noqa[CHK-PYTREE] host-side result record — holds per-rung
+#   FitResults after solving; never crosses a jit boundary.
 @dataclasses.dataclass
 class PathResult:
     """A solved regularization ladder: ``results[i]`` is the
@@ -112,6 +114,8 @@ def reg_path(A, y, *, lams=None, Cs=None, cfg=None, kernel=None,
                       op=rep[0])
 
 
+# repro: noqa[CHK-PYTREE] host-side result record — scores are gathered
+#   on the host across folds; never crosses a jit boundary.
 @dataclasses.dataclass
 class CVResult:
     """k-fold grid search scores.  ``scores[k, f]`` is fold k's

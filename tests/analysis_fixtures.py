@@ -1,0 +1,136 @@
+"""Minimal positive/negative Pallas launch fixtures for the
+``repro.analysis`` sanitizer tests.
+
+Each function issues one ``pl.pallas_call`` with a deliberately broken
+(or deliberately clean) launch geometry.  They are ONLY ever driven
+under ``repro.analysis.registry.capture``, which replaces the launch
+with a recorder — the kernel bodies never execute, so a no-op body is
+enough.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compat import CompilerParams
+
+
+def _nop(*refs):
+    pass
+
+
+def racing_out_spec():
+    """Two PARALLEL grid points both map to output block (0, 0)."""
+    x = jnp.zeros((16, 128), jnp.float32)
+    pl.pallas_call(
+        _nop,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+    )(x)
+
+
+def accumulating_out_spec():
+    """Clean twin of ``racing_out_spec``: the same revisit pattern along
+    an ARBITRARY (sequential) axis — the legal accumulate idiom."""
+    x = jnp.zeros((16, 128), jnp.float32)
+    pl.pallas_call(
+        _nop,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(x)
+
+
+def coverage_hole():
+    """Output has two row blocks; the index map only ever writes the
+    first."""
+    x = jnp.zeros((16, 128), jnp.float32)
+    pl.pallas_call(
+        _nop,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, 128), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(x)
+
+
+def full_coverage():
+    """Clean twin of ``coverage_hole``: identity index map."""
+    x = jnp.zeros((16, 128), jnp.float32)
+    pl.pallas_call(
+        _nop,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, 128), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+    )(x)
+
+
+def misaligned_block():
+    """Lane-dim block of 100 on a 200-wide f32 array: neither a
+    128-multiple nor the full array extent."""
+    x = jnp.zeros((8, 200), jnp.float32)
+    pl.pallas_call(
+        _nop,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 100), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((8, 100), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8, 200), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(x)
+
+
+def aligned_block():
+    """Clean twin of ``misaligned_block``: (8, 128) f32 tiles."""
+    x = jnp.zeros((8, 256), jnp.float32)
+    pl.pallas_call(
+        _nop,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8, 256), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(x)
+
+
+def vmem_hog():
+    """(2048, 2048) f32 in + out blocks: 32 MB of blocks, 64 MB
+    double-buffered — 4x the 16 MB VMEM budget."""
+    x = jnp.zeros((2048, 2048), jnp.float32)
+    pl.pallas_call(
+        _nop,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((2048, 2048), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((2048, 2048), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2048, 2048), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(x)
+
+
+def vmem_modest():
+    """Clean twin of ``vmem_hog``: (128, 128) blocks fit trivially."""
+    x = jnp.zeros((2048, 2048), jnp.float32)
+    pl.pallas_call(
+        _nop,
+        grid=(16, 16),
+        in_specs=[pl.BlockSpec((128, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((2048, 2048), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(x)

@@ -1,0 +1,43 @@
+"""Shared pytest configuration.
+
+``REPRO_SANITIZE=1`` enables the opt-in runtime sanitizer (the dynamic
+half of ``repro.analysis``, DESIGN.md §11): the kernel test modules run
+with ``jax_debug_nans`` + ``jax_debug_infs`` so a NaN/Inf produced
+inside a kernel body raises at the producing op, and ``kernels/ops.py``
+forces ``interpret=True`` so the Pallas bodies run under the Python
+evaluator even on TPU.  Off by default — the flags re-run every jitted
+computation un-jitted on failure, which is far too slow for tier-1;
+CI runs it as a separate non-blocking job.
+"""
+from __future__ import annotations
+
+import os
+
+import pytest
+
+# test modules that drive the Pallas kernels (directly or through the
+# solver op_factory) — the sanitizer flags apply only here: debug_nans
+# on the distributed/system tests false-positives on masked lanes
+KERNEL_TEST_MODULES = frozenset({
+    "test_kmv", "test_pallas_gram", "test_pallas_rmsnorm",
+    "test_flash_attention",
+})
+
+
+def sanitize_enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") == "1"
+
+
+@pytest.fixture(autouse=True)
+def _repro_sanitize(request):
+    if not sanitize_enabled():
+        yield
+        return
+    module = getattr(request, "module", None)
+    name = getattr(module, "__name__", "").rsplit(".", 1)[-1]
+    if name not in KERNEL_TEST_MODULES:
+        yield
+        return
+    import jax
+    with jax.debug_nans(True), jax.debug_infs(True):
+        yield
