@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
          batched slab-free vs legacy dense                  [DESIGN §9]
   fig7   sweep throughput: vmapped fleet vs sequential fits,
          warm-started path iteration counts                 [DESIGN §10]
+  fig8   guarded-solve price: overhead at the autotuned
+         recompute cadence, NaN recovery, resume-after-kill [DESIGN §12]
   roofline  assigned-arch roofline table from the dry-run   [EXPERIMENTS §Roofline]
 
 ``--fast`` shrinks datasets/iterations (used by CI / test_system).
@@ -31,8 +33,8 @@ def main() -> None:
 
     from benchmarks import (fig1_dcd_convergence, fig2_bdcd_convergence,
                             fig3_scaling, fig4_breakdown, fig5_slabfree,
-                            fig6_predict, fig7_sweep, roofline,
-                            table4_blocksize)
+                            fig6_predict, fig7_sweep, fig8_resilience,
+                            roofline, table4_blocksize)
 
     def paper_dist_subprocess(fast=False):
         # needs its own process: it forces a 16-device host platform
@@ -61,6 +63,7 @@ def main() -> None:
         "fig5": fig5_slabfree.run,
         "fig6": fig6_predict.run,
         "fig7": fig7_sweep.run,
+        "fig8": fig8_resilience.run,
         "paper_dist": paper_dist_subprocess,
         "roofline": roofline.run,
     }

@@ -8,6 +8,8 @@ Three analyzers behind one CLI (``python -m repro.analysis``):
   pytree dataclasses, callable-typed static args)
 * ``comm_check`` — s-step collective auditor (census of traced
   collectives vs ``perf_model``'s modeled message schedule)
+* ``guard_check`` — guarded-carry coverage auditor (every floating
+  carry leaf must be seen by the divergence-guard health predicate)
 
 Findings carry stable check IDs and honor justified
 ``# repro: noqa[CHK-...]`` suppressions (``findings`` module).
@@ -15,7 +17,7 @@ Findings carry stable check IDs and honor justified
 from .findings import (ERROR, INFO, WARNING, Finding,  # noqa: F401
                        apply_suppressions, render_report)
 
-ANALYZERS = ("pallas", "lint", "comm")
+ANALYZERS = ("pallas", "lint", "comm", "guard")
 
 CHECKS = {
     "CHK-RACE": ("pallas", "error",
@@ -38,6 +40,8 @@ CHECKS = {
     "CHK-AXIS": ("comm", "error", "collective over unknown mesh axis"),
     "CHK-SSTEP": ("comm", "error",
                   "s-step per-round collectives != classical/s"),
+    "CHK-CARRY": ("guard", "error",
+                  "guarded-carry leaf missed by the health predicate"),
     "CHK-NOQA": ("-", "error", "suppression without justification"),
 }
 
@@ -45,9 +49,9 @@ CHECKS = {
 def run_all(only=None):
     """Run the selected analyzers (all by default) and resolve
     suppressions; returns the full finding list, suppressed included."""
-    from . import comm_check, lint, pallas_check
+    from . import comm_check, guard_check, lint, pallas_check
     runners = {"pallas": pallas_check.run, "lint": lint.run,
-               "comm": comm_check.run}
+               "comm": comm_check.run, "guard": guard_check.run}
     selected = ANALYZERS if not only else tuple(only)
     found = []
     for name in selected:

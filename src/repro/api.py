@@ -55,6 +55,7 @@ resolve through the perf-model autotuner before the solve; the chosen
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from functools import partial
@@ -64,8 +65,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compat import make_mesh_auto
-from repro.core import (KernelConfig, KRRConfig, SVMConfig, NO_TOL,
+from repro.compat import enable_x64, make_mesh_auto
+from repro.core import (DIVERGED_NONFINITE, GuardSpec, KernelConfig,
+                        KRRConfig, SVMConfig, NO_TOL,
                         ExactGramOperator,
                         bdcd_krr, block_schedule, coordinate_schedule,
                         dcd_ksvm, gram_slab, krr_rel_residual,
@@ -77,8 +79,18 @@ from repro.core import (KernelConfig, KRRConfig, SVMConfig, NO_TOL,
 from repro.core import distributed
 from repro.core.nystrom import (LANDMARK_METHODS, fit_nystrom,
                                 lowrank_operator)
-from repro.core.perf_model import modeled_fit_cost
+from repro.core.perf_model import choose_recompute_every, modeled_fit_cost
 from repro.core.predict import BatchedPredictor
+from repro.resilience.guard import (DivergenceError, finite_health,
+                                    init_residual, make_correct_fn,
+                                    next_fallback)
+from repro.resilience.health import (HealthEvent, KIND_METRIC,
+                                     KIND_NONFINITE, KIND_RESUME,
+                                     SolveHealth)
+from repro.resilience.checkpoint import (load_solve_state,
+                                         save_solve_state,
+                                         solve_fingerprint)
+from repro.resilience.faults import SimulatedKill, active_plan
 
 METHODS = ("classical", "sstep")
 LAYOUTS = ("serial", "1d", "2d")
@@ -127,6 +139,32 @@ class SolverOptions:
                  the top modeled candidates are additionally MEASURED
                  for ``probe`` outer rounds each and the fastest wins
                  (0 = trust the Hockney model alone).
+    guard:       guarded solve (DESIGN.md §12): the round loop carries
+                 the residual ``f = K @ alpha`` (same per-round kernel
+                 work — the recurrence reuses the block each round
+                 already evaluates), health-checks every round, corrects
+                 residual drift, and on divergence auto-falls back along
+                 the escalation ladder (halve s -> classical -> f64)
+                 from the last good state.  ``FitResult.health`` records
+                 everything observed.  Requires slab_free.
+    recompute_every: drift-correction cadence in OUTER rounds — every
+                 that many rounds ``f`` is recomputed exactly through
+                 the operator (one extra KMV, residual replacement).
+                 "auto" resolves via the perf model to the largest
+                 cadence within the 10% overhead budget; 0 disables
+                 correction (serial layouts only — the distributed
+                 bodies recompute their round quantities from alpha
+                 every round and carry no drifting residual).
+    checkpoint_every: mid-solve snapshot cadence in OUTER rounds (0 =
+                 off); requires ``checkpoint_dir`` and ``guard``.
+                 ``fit(resume_from=checkpoint_dir)`` restores a killed
+                 solve and continues it — bit-identical modulo the
+                 restart round.
+    checkpoint_dir: where snapshots go (atomic step directories via
+                 train/checkpoint.py).
+    fallback:    walk the escalation ladder on divergence (default); if
+                 False a divergence raises ``DivergenceError``
+                 immediately, surfacing the structured events instead.
     """
 
     method: str = "sstep"
@@ -144,6 +182,11 @@ class SolverOptions:
     landmarks: int = 256
     landmark_method: str = "uniform"
     probe: int = 0
+    guard: bool = False
+    recompute_every: Union[int, str] = AUTO
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    fallback: bool = True
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -177,6 +220,28 @@ class SolverOptions:
             raise ValueError(f"landmark_method must be one of "
                              f"{LANDMARK_METHODS}, got "
                              f"{self.landmark_method!r}")
+        if self.recompute_every != AUTO and (
+                not isinstance(self.recompute_every, int)
+                or self.recompute_every < 0):
+            raise ValueError(f"recompute_every must be an int >= 0 or "
+                             f"{AUTO!r}, got {self.recompute_every!r}")
+        if not isinstance(self.checkpoint_every, int) \
+                or self.checkpoint_every < 0:
+            raise ValueError(f"checkpoint_every must be an int >= 0, "
+                             f"got {self.checkpoint_every!r}")
+        if self.guard and not self.slab_free:
+            raise ValueError("guard=True requires slab_free=True: the "
+                             "guarded round protocol reads the kernel "
+                             "through the GramOperator (the "
+                             "materialized-slab oracle has no residual "
+                             "recurrence to guard)")
+        if self.checkpoint_every > 0 and self.checkpoint_dir is None:
+            raise ValueError("checkpoint_every > 0 requires "
+                             "checkpoint_dir=")
+        if self.checkpoint_every > 0 and not self.guard:
+            raise ValueError("checkpoint_every > 0 requires guard=True "
+                             "(snapshots are cut at the guarded "
+                             "executor's segment boundaries)")
 
     @property
     def needs_autotune(self) -> bool:
@@ -221,6 +286,11 @@ class FitResult:
     representation: str = "exact"  # "exact" | "nystrom(l=...)"
     plan: Optional[object] = None  # tune.TunedPlan when any knob was
                                    # "auto" (modeled frontier + choice)
+    health: Optional[SolveHealth] = None
+                                   # guarded runs: drift observations,
+                                   # divergence/fallback events,
+                                   # checkpoint/resume ledger
+                                   # (DESIGN.md §12)
 
     def metric_history(self) -> Optional[np.ndarray]:
         """The evaluated convergence trajectory — the canonical accessor
@@ -236,6 +306,30 @@ def _check_predict_batch(batch) -> int:
         raise ValueError(
             f"predict_batch must be a positive int, got {batch!r}")
     return batch
+
+
+def _check_finite(value, name: str):
+    """Eager input validation: reject non-finite data at the facade
+    boundary with the offending argument NAMED, instead of letting a
+    single NaN silently poison the whole solve through the round
+    recurrences (the failure mode the runtime guard exists for —
+    corrupt INPUT deserves an immediate, attributable error)."""
+    value = jnp.asarray(value)
+    if not jnp.issubdtype(value.dtype, jnp.floating):
+        return value
+    if not bool(jnp.all(jnp.isfinite(value))):
+        bad = int(jnp.sum(~jnp.isfinite(value)))
+        raise ValueError(
+            f"{name} contains {bad} non-finite (nan/inf) value"
+            f"{'s' if bad != 1 else ''} — clean or impute the data "
+            f"before fitting")
+    return value
+
+
+def _check_positive(value: float, name: str) -> float:
+    if not value > 0:
+        raise ValueError(f"{name} must be > 0, got {value!r}")
+    return value
 
 
 def _as_kernel(kernel: Union[str, KernelConfig, None]) -> KernelConfig:
@@ -295,6 +389,362 @@ def _krr_serial_tol(A, y, a0, schedule, tol, *, cfg: KRRConfig, s: int,
                       metric_fn=lambda a: krr_rel_residual(A, y, a, cfg))
 
 
+@partial(jax.jit, static_argnames=("problem", "cfg", "s", "check_every",
+                                   "correct_every", "lowrank",
+                                   "want_metric", "fault_target"))
+def _guarded_serial_chunk(A, y, a0, f0, schedule, tol, fault_round,
+                          fault_value, *, problem, cfg, s: int,
+                          check_every: int, correct_every: int,
+                          lowrank: bool, want_metric: bool,
+                          fault_target: Optional[str] = None, op=None):
+    """One guarded segment (DESIGN.md §12): the guarded round fns over
+    the ``(alpha, f)`` carry, driven by the guarded while-loop with
+    per-round health checks and periodic residual replacement.  The
+    fault lane (static ``fault_target``) is the test harness's hook: at
+    round ``fault_round`` it adds ``fault_value`` to the chosen carry
+    leaf AFTER the round update — the jit-safe analogue of a hardware
+    flip, compiled only when a fault plan is armed."""
+    if problem == "ksvm":
+        if s == 1:
+            base, xs = make_dcd_round_fn(A, y, cfg, op=op,
+                                         guard=True), schedule
+        else:
+            base = make_sstep_dcd_round_fn(A, y, cfg, s, op=op,
+                                           guard=True)
+            xs = pad_rounds(schedule, s)
+        gap = ksvm_duality_gap_lowrank if lowrank else ksvm_duality_gap
+        metric = lambda c: gap(A, y, c[0], cfg)
+    else:
+        if s == 1:
+            base, xs = make_bdcd_round_fn(A, y, cfg, op=op,
+                                          guard=True), schedule
+        else:
+            base = make_sstep_bdcd_round_fn(A, y, cfg, s, op=op,
+                                            guard=True)
+            xs = pad_rounds(schedule, s)
+        metric = lambda c: krr_rel_residual(A, y, c[0], cfg)
+
+    rf = base
+    if fault_target is not None:
+        R = schedule.shape[0] if s == 1 else -(-schedule.shape[0] // s)
+        hits = jnp.arange(R) == fault_round
+
+        def rf(carry, xz):
+            x, hit = xz
+            alpha, f = base(carry, x)
+            bad = jnp.where(hit, jnp.asarray(fault_value, alpha.dtype),
+                            jnp.zeros((), alpha.dtype))
+            if fault_target == "alpha":
+                return alpha + bad, f
+            return alpha, f + bad
+
+        xs = (xs, hits)
+
+    spec = GuardSpec(
+        health_fn=finite_health,
+        correct_fn=make_correct_fn(op) if correct_every >= 1 else None,
+        correct_every=correct_every)
+    return run_rounds(rf, (a0, f0), xs, tol=tol, check_every=check_every,
+                      metric_fn=metric if want_metric else None,
+                      guard=spec)
+
+
+def _cast_floating(tree, dtype):
+    """Cast every floating leaf (operators are registered pytrees, so
+    their static config rides along untouched)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x,
+        tree)
+
+
+def _run_guarded_serial(problem, A_s, y, a0, schedule, cfg_s,
+                        opts: SolverOptions, train_op, *, fingerprint,
+                        resume=None):
+    """The host half of the guarded serial solve: run
+    ``_guarded_serial_chunk`` in checkpoint-bounded segments, harvest
+    drift/metric observations, and on divergence walk the escalation
+    ladder (halve s -> classical -> f64 accumulation) from the last
+    good state.  Returns ``(alpha, history, converged, rounds_run,
+    iters_run, health)``."""
+    from repro.train.checkpoint import CheckpointManager
+
+    H = schedule.shape[0]
+    want_metric = opts.tol > 0.0 or opts.record
+    tol = opts.tol if opts.tol > 0.0 else NO_TOL
+    lowrank = problem == "ksvm" and bool(opts.approx)
+    base_dtype = A_s.dtype
+
+    s_cur, method_cur = opts.s_eff, opts.method
+    x64 = False
+    pos, rounds_done, converged = 0, 0, False
+    alpha = a0
+    f = None
+    events, drifts, hists = [], [], []
+    checkpoints, resumed_from = 0, None
+
+    if resume is not None:
+        alpha = jnp.asarray(resume["alpha"], base_dtype)
+        f = (jnp.asarray(resume["f"], base_dtype)
+             if resume.get("f") is not None else None)
+        pos = resume["iters_done"]
+        s_cur, method_cur = resume["s_cur"], resume["method_cur"]
+        resumed_from = resume["path"]
+        events.append(HealthEvent(
+            kind=KIND_RESUME, round_idx=rounds_done, iter_idx=pos,
+            action="resume", detail=resumed_from))
+
+    plan = active_plan()
+    mgr = None
+    if opts.checkpoint_every > 0:
+        mgr = CheckpointManager(opts.checkpoint_dir, save_every=1)
+
+    A_cur, y_cur, op_cur = A_s, y, train_op
+    if f is None:
+        f = init_residual(op_cur, alpha)
+
+    while pos < H and not converged:
+        if opts.checkpoint_every > 0:
+            seg = min(opts.checkpoint_every * s_cur, H - pos)
+        else:
+            seg = H - pos
+        sched_seg = schedule[pos:pos + seg]
+        fault_round = (plan.carry_fault_round(pos, seg, s_cur)
+                       if plan is not None else -1)
+        fault_target = plan.target if fault_round >= 0 else None
+        fault_value = plan.value if plan is not None else float("nan")
+
+        ctx = enable_x64() if x64 else contextlib.nullcontext()
+        with ctx:
+            res = _guarded_serial_chunk(
+                A_cur, y_cur, alpha, f, sched_seg,
+                jnp.asarray(tol, A_cur.dtype), fault_round, fault_value,
+                problem=problem, cfg=cfg_s, s=s_cur,
+                check_every=opts.check_every,
+                correct_every=opts.recompute_every,
+                lowrank=lowrank, want_metric=want_metric,
+                fault_target=fault_target, op=op_cur)
+        div = int(res.diverged_round)
+        dh = res.drift_history()
+        if dh is not None and len(dh):
+            drifts.append(np.asarray(dh, np.float64))
+        mh = res.metric_history()
+        if mh is not None and len(mh):
+            hists.append(np.asarray(mh, np.float64))
+
+        if div >= 0:
+            # the unhealthy round's update was DISCARDED in-loop; the
+            # carry is the last good state — consume the good prefix
+            alpha, f = res.state
+            good = div
+            consumed = min(good * s_cur, seg)
+            pos += consumed
+            rounds_done += good
+            kind = (KIND_NONFINITE
+                    if int(res.diverged_kind) == DIVERGED_NONFINITE
+                    else KIND_METRIC)
+            if fault_round >= 0 and div >= fault_round:
+                plan.carry_fired = True      # one-shot: don't re-fire
+            if not opts.fallback:
+                raise DivergenceError(
+                    f"guarded solve diverged ({kind}) at round "
+                    f"{rounds_done} (iteration {pos}) and fallback is "
+                    f"disabled", events=tuple(events))
+            try:
+                action, s_cur, method_cur, x64_new = next_fallback(
+                    s_cur, method_cur, x64)
+            except DivergenceError as e:
+                raise DivergenceError(str(e),
+                                      events=tuple(events)) from None
+            events.append(HealthEvent(
+                kind=kind, round_idx=rounds_done, iter_idx=pos,
+                action=action,
+                detail=f"resuming from last good state at iter {pos}"))
+            if x64_new and not x64:
+                x64 = True
+                with enable_x64():
+                    A_cur = A_cur.astype(jnp.float64)
+                    y_cur = y_cur.astype(jnp.float64)
+                    op_cur = _cast_floating(op_cur, jnp.float64)
+                    alpha = alpha.astype(jnp.float64)
+            # after ANY event the recurrence restarts from an exact
+            # residual (the fault may have corrupted f alone)
+            with (enable_x64() if x64 else contextlib.nullcontext()):
+                f = op_cur.full_matvec(alpha)
+            continue
+
+        alpha, f = res.state
+        seg_rounds = int(res.rounds_run)
+        rounds_done += seg_rounds
+        if bool(res.converged):
+            converged = True
+            pos += min(seg_rounds * s_cur, seg)
+        else:
+            pos += seg
+        if mgr is not None and not converged and pos < H:
+            save_solve_state(mgr, pos,
+                             jnp.asarray(alpha, base_dtype),
+                             jnp.asarray(f, base_dtype),
+                             s_cur=s_cur, method_cur=method_cur,
+                             fingerprint=fingerprint)
+            checkpoints += 1
+            if plan is not None and plan.should_kill(pos):
+                plan.kill_fired = True
+                mgr.wait()               # the snapshot is durable
+                raise SimulatedKill(
+                    f"simulated preemption at iteration {pos}",
+                    opts.checkpoint_dir)
+    if mgr is not None:
+        mgr.wait()
+
+    if x64:
+        with enable_x64():
+            alpha = alpha.astype(base_dtype)
+
+    history = (np.concatenate(hists) if hists
+               else (np.zeros(0) if want_metric else None))
+    health = SolveHealth(
+        guarded=True, recompute_every=opts.recompute_every,
+        drift=(np.concatenate(drifts) if drifts else np.zeros(0)),
+        corrections=sum(len(d) for d in drifts),
+        events=tuple(events), checkpoints=checkpoints,
+        resumed_from=resumed_from)
+    return alpha, history, converged, rounds_done, pos, health
+
+
+def _run_guarded_dist(problem, A_s, y, a0, schedule, cfg_s,
+                      opts: SolverOptions, mesh, metric_host, *,
+                      fingerprint, resume=None):
+    """Guarded executor for the 1d/2d layouts.  The distributed bodies
+    recompute their round quantities from alpha every round (one psum —
+    audited by repro.analysis.comm_check), so there is NO drifting
+    residual to correct and NO extra in-loop collective the guard could
+    add; the guard runs at chunk boundaries on the host instead:
+    non-finite/blown-up alpha detection, the same escalation ladder
+    (from the chunk-start state), and checkpoint/resume.  Returns
+    ``(alpha, history, converged, rounds_run, iters_run, health)``."""
+    from repro.train.checkpoint import CheckpointManager
+    from repro.resilience.faults import poisoned_1d_factory
+
+    H = schedule.shape[0]
+    want_metric = opts.tol > 0.0 or opts.record
+    base_dtype = A_s.dtype
+    blowup = 1e4
+
+    s_cur, method_cur = opts.s_eff, opts.method
+    x64 = False
+    pos, rounds_done, converged = 0, 0, False
+    alpha = a0
+    events, hist = [], []
+    checkpoints, resumed_from = 0, None
+    best = float("inf")
+
+    if resume is not None:
+        alpha = jnp.asarray(resume["alpha"], base_dtype)
+        pos = resume["iters_done"]
+        s_cur, method_cur = resume["s_cur"], resume["method_cur"]
+        resumed_from = resume["path"]
+        events.append(HealthEvent(
+            kind=KIND_RESUME, round_idx=rounds_done, iter_idx=pos,
+            action="resume", detail=resumed_from))
+
+    plan = active_plan()
+    mgr = None
+    if opts.checkpoint_every > 0:
+        mgr = CheckpointManager(opts.checkpoint_dir, save_every=1)
+    A_cur, y_cur = A_s, y
+
+    while pos < H and not converged:
+        chunk = opts.check_every * s_cur
+        if opts.checkpoint_every > 0:
+            chunk = min(chunk, opts.checkpoint_every * s_cur)
+        seg = min(chunk, H - pos)
+        sched_seg = schedule[pos:pos + seg]
+        # 1d fault harness: a poisoned op_factory corrupts one rank's
+        # psum contribution for the whole chunk containing the target
+        # iteration (consumed once, like the serial fault lane)
+        op_factory = None
+        if (plan is not None and opts.layout == "1d"
+                and plan.carry_fault_round(pos, seg, s_cur) >= 0):
+            op_factory = poisoned_1d_factory(scale=plan.value)
+        ctx = enable_x64() if x64 else contextlib.nullcontext()
+        with ctx:
+            alpha_new = _dist_chunk(A_cur, y_cur, alpha, sched_seg,
+                                    problem=problem, layout=opts.layout,
+                                    mesh=mesh, cfg=cfg_s, s=s_cur,
+                                    slab_free=opts.slab_free,
+                                    op_factory=op_factory)
+        val = None
+        healthy = bool(jnp.all(jnp.isfinite(alpha_new)))
+        kind = KIND_NONFINITE
+        if healthy and want_metric:
+            val = metric_host(alpha_new)
+            if not np.isfinite(val) or (np.isfinite(best)
+                                        and val > blowup * best):
+                healthy, kind = False, KIND_METRIC
+
+        if not healthy:
+            # last good state = the chunk-start alpha (the distributed
+            # body is one jit region; mid-chunk rounds are not
+            # recoverable — chunks are the guard granularity here)
+            if op_factory is not None:
+                plan.carry_fired = True
+            if not opts.fallback:
+                raise DivergenceError(
+                    f"guarded {opts.layout} solve diverged ({kind}) in "
+                    f"the chunk at iteration {pos} and fallback is "
+                    f"disabled", events=tuple(events))
+            try:
+                action, s_cur, method_cur, x64_new = next_fallback(
+                    s_cur, method_cur, x64)
+            except DivergenceError as e:
+                raise DivergenceError(str(e),
+                                      events=tuple(events)) from None
+            events.append(HealthEvent(
+                kind=kind, round_idx=rounds_done, iter_idx=pos,
+                action=action,
+                detail=f"re-running chunk from iteration {pos}"))
+            if x64_new and not x64:
+                x64 = True
+                with enable_x64():
+                    A_cur = A_cur.astype(jnp.float64)
+                    y_cur = y_cur.astype(jnp.float64)
+                    alpha = alpha.astype(jnp.float64)
+            continue
+
+        alpha = alpha_new
+        pos += seg
+        rounds_done += -(-seg // s_cur)
+        if val is not None:
+            hist.append(val)
+            best = min(best, val)
+            if opts.tol > 0.0 and val <= opts.tol:
+                converged = True
+        if mgr is not None and not converged and pos < H:
+            save_solve_state(mgr, pos, jnp.asarray(alpha, base_dtype),
+                             None, s_cur=s_cur, method_cur=method_cur,
+                             fingerprint=fingerprint)
+            checkpoints += 1
+            if plan is not None and plan.should_kill(pos):
+                plan.kill_fired = True
+                mgr.wait()
+                raise SimulatedKill(
+                    f"simulated preemption at iteration {pos}",
+                    opts.checkpoint_dir)
+    if mgr is not None:
+        mgr.wait()
+
+    if x64:
+        with enable_x64():
+            alpha = alpha.astype(base_dtype)
+    history = np.asarray(hist) if want_metric else None
+    health = SolveHealth(
+        guarded=True, recompute_every=0, drift=np.zeros(0),
+        corrections=0, events=tuple(events), checkpoints=checkpoints,
+        resumed_from=resumed_from)
+    return alpha, history, converged, rounds_done, pos, health
+
+
 def _serial_fast(problem, A, y, a0, schedule, cfg, s, slab_free, op=None):
     """tol == 0, no recording: the legacy jitted entrypoints verbatim
     (driven by the facade-built operator when slab-free)."""
@@ -313,30 +763,34 @@ def _serial_fast(problem, A, y, a0, schedule, cfg, s, slab_free, op=None):
 
 
 @partial(jax.jit, static_argnames=("problem", "layout", "mesh", "cfg",
-                                   "s", "slab_free"))
+                                   "s", "slab_free", "op_factory"))
 def _dist_chunk(A, y, a0, schedule, *, problem, layout, mesh, cfg, s,
-                slab_free):
+                slab_free, op_factory=None):
     """Jit-cached wrapper around the shard_map solvers: the chunked
     tolerance loop re-enters here once per chunk, and every chunk of the
     same length hits the cache instead of re-tracing the shard_map body
-    (at most two shapes compile per fit: the chunk and the ragged tail)."""
+    (at most two shapes compile per fit: the chunk and the ragged tail).
+    ``op_factory`` (static) overrides the per-rank operator build — the
+    fault-injection hook for guarded distributed runs."""
     return _dist_call(problem, layout, mesh, A, y, a0, schedule, cfg, s,
-                      slab_free)
+                      slab_free, op_factory)
 
 
 def _dist_call(problem, layout, mesh, A, y, a0, schedule, cfg, s,
-               slab_free):
+               slab_free, op_factory=None):
     if problem == "ksvm":
         if layout == "1d":
             return distributed.dist_sstep_dcd_ksvm(
-                mesh, A, y, a0, schedule, cfg, s=s, slab_free=slab_free)
+                mesh, A, y, a0, schedule, cfg, s=s, slab_free=slab_free,
+                op_factory=op_factory)
         return distributed.dist_sstep_dcd_ksvm_2d(
-            mesh, A, y, a0, schedule, cfg, s=s)
+            mesh, A, y, a0, schedule, cfg, s=s, op_factory=op_factory)
     if layout == "1d":
         return distributed.dist_sstep_bdcd_krr(
-            mesh, A, y, a0, schedule, cfg, s=s, slab_free=slab_free)
+            mesh, A, y, a0, schedule, cfg, s=s, slab_free=slab_free,
+            op_factory=op_factory)
     return distributed.dist_sstep_bdcd_krr_2d(
-        mesh, A, y, a0, schedule, cfg, s=s)
+        mesh, A, y, a0, schedule, cfg, s=s, op_factory=op_factory)
 
 
 def _build_representation(A, cfg, opts: SolverOptions):
@@ -373,7 +827,7 @@ def _solve_cfg(cfg, opts: SolverOptions):
 
 
 def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
-         a0=None, rep=None):
+         a0=None, rep=None, resume_from=None):
     m, n = A.shape
 
     plan = None
@@ -382,6 +836,24 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
         plan = resolve_options(m, n, cfg, opts, problem=problem,
                                A=A, y=y)
         opts = plan.options
+    if opts.guard and opts.recompute_every == AUTO:
+        # idempotent backstop behind autotune's own resolution: price the
+        # exact recompute against the per-round cost and pick the cadence
+        # that keeps guarded overhead under GUARD_OVERHEAD_BUDGET.  The
+        # distributed layouts recompute from alpha every round already —
+        # no drifting residual, so correction is off there.
+        if opts.layout == "serial":
+            rec = choose_recompute_every(
+                m, n, cfg.kernel.name,
+                b=opts.b if problem == "krr" else 1, s=opts.s_eff,
+                approx=bool(opts.approx),
+                landmarks=min(opts.landmarks, m) if opts.approx else 0)
+        else:
+            rec = 0
+        opts = dataclasses.replace(opts, recompute_every=rec)
+    if resume_from is not None and not opts.guard:
+        raise ValueError("resume_from= requires options.guard=True (the "
+                         "checkpoint holds a guarded-carry snapshot)")
 
     H = opts.max_iters
     s = opts.s_eff
@@ -418,8 +890,22 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
     want_metric = opts.tol > 0.0 or opts.record
     tol = opts.tol if opts.tol > 0.0 else NO_TOL
 
+    resume = None
+    fp = None
+    if opts.guard:
+        fp = solve_fingerprint(problem, m, A.dtype, cfg, opts)
+        if resume_from is not None:
+            r_alpha, r_f, extra = load_solve_state(
+                resume_from, expect_fingerprint=fp)
+            resume = {"alpha": r_alpha, "f": r_f,
+                      "iters_done": int(extra["iters_done"]),
+                      "s_cur": int(extra["s_cur"]),
+                      "method_cur": extra["method_cur"],
+                      "path": resume_from}
+
     history = None
     converged = False
+    health = None
     if opts.layout == "serial":
         P = 1
         # the training operator (K-SVM: diag(y)-scaled rows — a second
@@ -431,7 +917,12 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
         if opts.slab_free:
             train_op = (rep_op.scale_rows(y) if problem == "ksvm"
                         else rep_op)
-        if not want_metric:
+        if opts.guard:
+            (alpha, history, converged, rounds_run, iters_run,
+             health) = _run_guarded_serial(
+                problem, A_s, y, a0, schedule, cfg_s, opts, train_op,
+                fingerprint=fp, resume=resume)
+        elif not want_metric:
             alpha = _serial_fast(problem, A_s, y, a0, schedule, cfg_s, s,
                                  opts.slab_free, op=train_op)
             rounds_run = -(-H // s)
@@ -447,7 +938,8 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
             rounds_run = int(res.rounds_run)
             converged = bool(res.converged)
             history = np.asarray(res.metric_history())
-        iters_run = min(rounds_run * s, H)
+        if not opts.guard:
+            iters_run = min(rounds_run * s, H)
     else:
         # the shard_map bodies build their own per-rank operators from
         # the sharded solve matrix: for low-rank runs A_s IS Phi, so the
@@ -459,7 +951,12 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
         alpha = a0
         dist_kw = dict(problem=problem, layout=opts.layout, mesh=mesh,
                        cfg=cfg_s, s=s, slab_free=opts.slab_free)
-        if not want_metric:
+        if opts.guard:
+            (alpha, history, converged, rounds_run, iters_run,
+             health) = _run_guarded_dist(
+                problem, A_s, y, a0, schedule, cfg_s, opts, mesh,
+                metric_host, fingerprint=fp, resume=resume)
+        elif not want_metric:
             alpha = _dist_chunk(A_s, y, alpha, schedule, **dist_kw)
             rounds_run, iters_run = -(-H // s), H
         else:
@@ -492,7 +989,7 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
                        converged=converged,
                        rounds_run=rounds_run, iters_run=iters_run,
                        wall_time_s=wall, comm=comm, options=opts,
-                       representation=rep_name, plan=plan)
+                       representation=rep_name, plan=plan, health=health)
     return result, rep_op
 
 
@@ -513,16 +1010,21 @@ class KernelSVM:
                  kernel: Union[str, KernelConfig, None] = None,
                  options: Optional[SolverOptions] = None,
                  predict_batch: int = 1024):
+        _check_positive(C, "C")
         self.cfg = SVMConfig(C=C, loss=loss, kernel=_as_kernel(kernel))
         self.options = options or SolverOptions()
         self.predict_batch = _check_predict_batch(predict_batch)
 
-    def fit(self, A, y, warm_start=None) -> FitResult:
+    def fit(self, A, y, warm_start=None, resume_from=None) -> FitResult:
         """Solve the dual.  ``warm_start`` seeds alpha (shape (m,)) —
         e.g. the solution at a neighbouring C (see ``fit_path``);
-        ``None`` is the usual cold start at zero."""
+        ``None`` is the usual cold start at zero.  ``resume_from``
+        restores a mid-solve checkpoint directory written by a guarded
+        fit (``options.checkpoint_every``) and continues from it."""
+        _check_finite(A, "A")
+        _check_finite(y, "y")
         result, op = _fit("ksvm", A, y, self.cfg, self.options,
-                          a0=warm_start)
+                          a0=warm_start, resume_from=resume_from)
         self.A_, self.y_, self.alpha_ = A, y, result.alpha
         self.op_ = op
         self.result_ = result
@@ -546,6 +1048,7 @@ class KernelSVM:
         return path
 
     def decision_function(self, A_test):
+        _check_finite(A_test, "A_test")
         if self._predictor is None:
             self._predictor = BatchedPredictor(
                 self.op_, self.alpha_ * self.y_,
@@ -570,16 +1073,21 @@ class KernelRidge:
                  kernel: Union[str, KernelConfig, None] = None,
                  options: Optional[SolverOptions] = None,
                  predict_batch: int = 1024):
+        _check_positive(lam, "lam")
         self.cfg = KRRConfig(lam=lam, kernel=_as_kernel(kernel))
         self.options = options or SolverOptions()
         self.predict_batch = _check_predict_batch(predict_batch)
 
-    def fit(self, A, y, warm_start=None) -> FitResult:
+    def fit(self, A, y, warm_start=None, resume_from=None) -> FitResult:
         """Solve the dual.  ``warm_start`` seeds alpha (shape (m,)) —
         e.g. the solution at a neighbouring lambda (see ``fit_path``);
-        ``None`` is the usual cold start at zero."""
+        ``None`` is the usual cold start at zero.  ``resume_from``
+        restores a mid-solve checkpoint directory written by a guarded
+        fit (``options.checkpoint_every``) and continues from it."""
+        _check_finite(A, "A")
+        _check_finite(y, "y")
         result, op = _fit("krr", A, y, self.cfg, self.options,
-                          a0=warm_start)
+                          a0=warm_start, resume_from=resume_from)
         self.A_, self.alpha_ = A, result.alpha
         self.op_ = op
         self.result_ = result
@@ -605,6 +1113,7 @@ class KernelRidge:
         return path
 
     def predict(self, A_test):
+        _check_finite(A_test, "A_test")
         if self._predictor is None:
             self._predictor = BatchedPredictor(
                 self.op_, self.alpha_, batch=self.predict_batch,

@@ -1,7 +1,9 @@
 from .kernels import (KernelConfig, GramOperator, ExactGramOperator,
                       LowRankGramOperator, gram_slab, gram_full,
-                      apply_epilogue, kernel_diag, kmv_slab_free)
-from .loop import (LoopResult, NO_TOL, pad_rounds, run_rounds,
+                      apply_epilogue, kernel_diag, kmv_apply,
+                      kmv_slab_free)
+from .loop import (DIVERGED_METRIC, DIVERGED_NONE, DIVERGED_NONFINITE,
+                   GuardSpec, LoopResult, NO_TOL, pad_rounds, run_rounds,
                    run_rounds_fleet)
 from .dcd import (SVMConfig, dcd_ksvm, coordinate_schedule, L1, L2,
                   make_dcd_round_fn)

@@ -52,7 +52,7 @@ def block_schedule(key: jax.Array, H: int, m: int, b: int) -> jnp.ndarray:
 def make_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
                        gram_fn: Optional[Callable] = None,
                        op_factory: Optional[Callable] = None,
-                       op=None, lam=None) -> Callable:
+                       op=None, lam=None, guard: bool = False) -> Callable:
     """``round_fn(alpha, idx) -> alpha`` for ``loop.run_rounds``: one
     Algorithm-3 exact b x b block solve.  ``op`` injects a prebuilt
     ``GramOperator`` (exact or low-rank) over the training
@@ -61,14 +61,38 @@ def make_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
     ``lam`` overrides ``cfg.lam`` with a TRACEABLE value — the batched
     cfg leaf of the fleet solver (repro.tune): ``jax.vmap`` over
     per-member scalars turns one closure into F lockstep problems
-    sharing the operator (DESIGN.md §10)."""
+    sharing the operator (DESIGN.md §10).
+
+    ``guard=True`` switches to the guarded-carry protocol
+    (``round_fn((alpha, f), idx) -> (alpha, f)`` with ``f = K @ alpha``
+    maintained by ``f += K[:, idx] @ dalpha`` — the same m x b block
+    the round already evaluates; ``U^T alpha`` becomes the free gather
+    ``f[idx]``, and drift correction splices an exactly recomputed
+    ``f`` back in; DESIGN.md §12).  Requires the operator path."""
     if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
         raise ValueError("pass at most one of gram_fn (materialized "
                          "slab), op_factory, or op (prebuilt operator)")
+    if guard and gram_fn is not None:
+        raise ValueError("guard=True requires the GramOperator path "
+                         "(gram_fn= is the legacy materialized oracle)")
     m = A.shape[0]
     inv_lam = 1.0 / (cfg.lam if lam is None else lam)
     if op is None and gram_fn is None:
         op = (op_factory or ExactGramOperator)(A, cfg.kernel)
+
+    if guard:
+        def round_fn(carry, idx):             # idx: (b,)
+            alpha, f = carry                  # f = K @ alpha, (m,)
+            b = idx.shape[0]
+            Gblk = op.cross_block(idx)        # (b, b)
+            uTa = f[idx]                      # U^T alpha, free gather
+            G = inv_lam * Gblk + m * jnp.eye(b, dtype=A.dtype)
+            rhs = y[idx] - m * alpha[idx] - inv_lam * uTa
+            dalpha = jnp.linalg.solve(G, rhs)
+            return (alpha.at[idx].add(dalpha),
+                    f + op.apply_at(idx, dalpha))
+
+        return round_fn
 
     def round_fn(alpha, idx):                 # idx: (b,)
         b = idx.shape[0]

@@ -89,7 +89,7 @@ def _dcd_theta(alpha_i, g, eta, nu):
 def make_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
                       gram_fn: Optional[Callable] = None,
                       op_factory: Optional[Callable] = None,
-                      op=None, C=None) -> Callable:
+                      op=None, C=None, guard: bool = False) -> Callable:
     """``round_fn(alpha, i) -> alpha`` for ``loop.run_rounds``: one
     Algorithm-1 coordinate step.  This closure IS the classical solver;
     ``dcd_ksvm`` and the ``repro.api`` facade both drive it.
@@ -103,14 +103,38 @@ def make_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
     leaf of the fleet solver (repro.tune): the derived clip bound nu and
     L2 shift omega become traced scalars, so ``jax.vmap`` over
     per-member C's solves a whole C-grid in lockstep (DESIGN.md §10).
+
+    ``guard=True`` switches to the guarded-carry protocol
+    (``round_fn((alpha, f), i) -> (alpha, f)`` with ``f = Ktil @ alpha``
+    maintained by the residual recurrence ``f += Ktil[:, i] * theta`` —
+    one ``apply_at`` of the SAME column the round already evaluates, so
+    the per-round kernel work is unchanged; DESIGN.md §12).  ``u^T
+    alpha`` then becomes the free gather ``f[i]``, and drift correction
+    can splice an exactly recomputed ``f`` back in (residual
+    replacement).  Requires the operator path (no ``gram_fn``).
     """
     if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
         raise ValueError("pass at most one of gram_fn (materialized "
                          "slab), op_factory, or op (prebuilt operator)")
+    if guard and gram_fn is not None:
+        raise ValueError("guard=True requires the GramOperator path "
+                         "(gram_fn= is the legacy materialized oracle)")
     Atil = y[:, None] * A                       # diag(y) @ A
     nu, omega = _nu_omega(cfg, C)
     if op is None and gram_fn is None:
         op = (op_factory or ExactGramOperator)(Atil, cfg.kernel)
+
+    if guard:
+        def round_fn(carry, i):
+            alpha, f = carry                    # f = Ktil @ alpha, (m,)
+            idx = i[None]
+            eta = op.cross_block(idx)[0, 0] + omega
+            g = f[i] - 1.0 + omega * alpha[i]   # u^T alpha = f[i], free
+            theta = _dcd_theta(alpha[i], g, eta, nu)
+            return (alpha.at[i].add(theta),
+                    f + op.apply_at(idx, theta[None]))
+
+        return round_fn
 
     def round_fn(alpha, i):
         idx = i[None]

@@ -150,6 +150,49 @@ def kmv_slab_free(A: jnp.ndarray, B: jnp.ndarray, X: jnp.ndarray,
     return out[:, 0] if vec else out
 
 
+def kmv_apply(A: jnp.ndarray, B: jnp.ndarray, w: jnp.ndarray,
+              cfg: KernelConfig, block: int = 2048) -> jnp.ndarray:
+    """``K(A, B) @ w`` — the adjoint of ``kmv_slab_free``'s reduction,
+    without an ``m x r`` slab (DESIGN.md §12).
+
+    This is the residual-recurrence update of the guarded solvers:
+    after a round changes ``alpha`` by ``w`` on the sampled coordinates,
+    ``f = K alpha`` advances by ``K[:, idx] @ w = K(A, A[idx]) @ w``.
+    Kernel-evaluation count is identical to the ``U^T alpha`` matvec the
+    recurrence replaces (m x r either way), so guarded rounds stay
+    cost-neutral between drift corrections.
+
+    linear:    K(A, B) w = A (B^T w) — pure algebra, slab-free.
+    poly/rbf:  blocked scan over m; each (block x r) kernel tile is
+               built, applied to w, and discarded.
+
+    w: (r,) or (r, c); returns (m,) / (m, c).
+    """
+    vec = w.ndim == 1
+    Wc = w[:, None] if vec else w
+    if cfg.name == LINEAR:
+        out = A @ (B.T @ Wc)                            # (m, c)
+    else:
+        m, n = A.shape
+        blk = min(block, m)
+        pad = (-m) % blk
+        Ap = jnp.pad(A, ((0, pad), (0, 0)))
+        cs = jnp.sum(B * B, axis=1) if cfg.name == RBF else None
+
+        def body(carry, a_blk):
+            dots = a_blk @ B.T                          # (blk, r)
+            if cfg.name == RBF:
+                Kb = apply_epilogue(dots, cfg,
+                                    jnp.sum(a_blk * a_blk, axis=1), cs)
+            else:
+                Kb = apply_epilogue(dots, cfg)
+            return carry, Kb @ Wc                       # (blk, c)
+
+        _, tiles = jax.lax.scan(body, 0.0, Ap.reshape(-1, blk, n))
+        out = tiles.reshape(-1, Wc.shape[1])[:m]
+    return out[:, 0] if vec else out
+
+
 class GramOperator:
     """Abstract kernel *representation*: slab-free access to the gram
     matrix ``K`` of a fixed training set (DESIGN.md §9).
@@ -233,6 +276,20 @@ class GramOperator:
         """(cross_block, matvec) for one s-step round."""
         return self.cross_block(idx), self.matvec(idx, X)
 
+    # -- guarded-solve surface (repro.resilience, DESIGN.md §12) --------
+
+    def apply_at(self, idx: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        """``K[:, idx] @ w`` — the residual-recurrence update: after a
+        round adds ``w`` to ``alpha[idx]``, ``f = K alpha`` advances by
+        exactly this column combination.  (m,) for w: (s*b,)."""
+        raise NotImplementedError
+
+    def full_matvec(self, X: jnp.ndarray) -> jnp.ndarray:
+        """``K @ X`` computed EXACTLY (one full kernel matvec) — the
+        drift-correction / residual-replacement primitive and the
+        residual initializer for warm starts.  (m,) for X: (m,)."""
+        raise NotImplementedError
+
 
 @dataclasses.dataclass(frozen=True)
 class ExactGramOperator(GramOperator):
@@ -282,6 +339,21 @@ class ExactGramOperator(GramOperator):
         if self.matvec_impl is not None:
             return self.matvec_impl(self.A, Xq, sw, self.cfg)
         return kmv_slab_free(self.A, Xq, sw, self.cfg, block=self.block)
+
+    def apply_at(self, idx: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        # always streams through the jnp KMV adjoint: the Pallas
+        # matvec_impl accelerates the U^T X reduction only — apply_at's
+        # tile loop runs over the m axis instead and its tiles are the
+        # same size, so there is nothing kernel-shaped to gain here
+        return kmv_apply(self.A, self.A[idx], w, self.cfg,
+                         block=self.block)
+
+    def full_matvec(self, X: jnp.ndarray) -> jnp.ndarray:
+        # K symmetric: K @ X == K(A, A)^T X — one full-width KMV
+        if self.matvec_impl is not None:
+            return self.matvec_impl(self.A, self.A, X, self.cfg)
+        return kmv_slab_free(self.A, self.A, X, self.cfg,
+                             block=self.block)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -347,6 +419,12 @@ class LowRankGramOperator(GramOperator):
                 "repro.core.nystrom.fit_nystrom / the repro.api facade "
                 "(SolverOptions(approx='nystrom'))")
         return self.fmap(Xq) @ sw                 # O(l) per query
+
+    def apply_at(self, idx: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        return self.Phi @ (self.Phi[idx].T @ w)   # O(m l), no slab
+
+    def full_matvec(self, X: jnp.ndarray) -> jnp.ndarray:
+        return self.Phi @ (self.Phi.T @ X)        # O(m l) exact in K~
 
 
 jax.tree_util.register_dataclass(

@@ -30,6 +30,18 @@ data only through a ``GramOperator`` (exact, low-rank, or a distributed
 all-reduce operator — DESIGN.md §9), injected per fit via the
 factories' ``op``/``op_factory`` parameters.
 
+``run_rounds`` optionally threads a GUARD through the protocol
+(repro.resilience, DESIGN.md §12): a ``GuardSpec`` adds (a) a jit-safe
+per-round health check — a round producing a non-finite carry is
+DISCARDED (the pre-round state is kept, done-mask style) and the loop
+freezes with ``diverged_round``/``diverged_kind`` stamped for the host
+to act on (escalation ladder in ``repro.api``); (b) periodic residual
+replacement — every ``correct_every`` rounds ``correct_fn`` recomputes
+the carried recurrence exactly and the observed drift is recorded into
+a fixed-size buffer; (c) metric blow-up detection against the best
+value seen so far.  ``guard=None`` is bit-compatible with the
+pre-guard driver.
+
 Everything here is pure ``lax``; the driver runs identically inside
 ``jax.jit`` and inside ``shard_map`` bodies (core/distributed.py).
 """
@@ -41,6 +53,33 @@ import jax
 import jax.numpy as jnp
 
 NO_TOL = float("-inf")        # sentinel: record the metric, never stop early
+
+# LoopResult.diverged_kind codes (0 = healthy throughout)
+DIVERGED_NONE = 0
+DIVERGED_NONFINITE = 1        # round_fn produced a non-finite carry leaf
+DIVERGED_METRIC = 2           # metric went non-finite or blew up vs best
+
+
+class GuardSpec(NamedTuple):
+    """Guard hooks for ``run_rounds`` (repro.resilience, DESIGN.md §12).
+
+    health_fn:      state -> scalar bool, True = healthy.  Runs on the
+                    FULL post-round carry every round; an unhealthy
+                    round is discarded and the loop freezes.  Must cover
+                    every carry leaf (``repro.analysis`` CHK-CARRY
+                    pokes NaNs into each leaf to verify it does).
+    correct_fn:     state -> (corrected_state, drift) — residual
+                    replacement: recompute the carried recurrence
+                    exactly and report the observed relative drift.
+    correct_every:  cadence of ``correct_fn`` in rounds (0 = never).
+    metric_blowup:  freeze when a checked metric exceeds
+                    ``metric_blowup * best_so_far`` (inf disables).
+    """
+
+    health_fn: Callable
+    correct_fn: Optional[Callable] = None
+    correct_every: int = 0
+    metric_blowup: float = 1e4
 
 
 class LoopResult(NamedTuple):
@@ -55,6 +94,19 @@ class LoopResult(NamedTuple):
     rounds_run:  number of rounds actually executed.
     converged:   metric <= tol at some check point (``run_rounds_fleet``:
                  the (F,) per-member mask; metric_hist is (n_checks, F)).
+
+    Guard extras (``guard=`` runs only; None otherwise — trailing
+    defaults keep every pre-guard construction site valid):
+
+    drift_hist:     (n_corrections,) observed relative drift at each
+                    residual replacement (only the first ``corrections``
+                    slots were evaluated).
+    corrections:    number of drift corrections performed.
+    diverged_round: 0-based index of the first unhealthy round, or -1.
+                    On non-finite divergence ``state`` is the LAST GOOD
+                    (pre-round) carry; the unhealthy update was never
+                    applied.
+    diverged_kind:  DIVERGED_NONE / DIVERGED_NONFINITE / DIVERGED_METRIC.
     """
 
     state: Any
@@ -63,6 +115,10 @@ class LoopResult(NamedTuple):
     checks_run: jnp.ndarray
     rounds_run: jnp.ndarray
     converged: jnp.ndarray
+    drift_hist: Optional[jnp.ndarray] = None
+    corrections: Optional[jnp.ndarray] = None
+    diverged_round: Optional[jnp.ndarray] = None
+    diverged_kind: Optional[jnp.ndarray] = None
 
     def metric_history(self) -> Optional[jnp.ndarray]:
         """The evaluated prefix ``metric_hist[:checks_run]`` (host-side:
@@ -71,6 +127,14 @@ class LoopResult(NamedTuple):
         if self.metric_hist is None:
             return None
         return self.metric_hist[:int(self.checks_run)]
+
+    def drift_history(self) -> Optional[jnp.ndarray]:
+        """The evaluated drift prefix ``drift_hist[:corrections]``
+        (host-side); ``None`` when the run was unguarded or had no
+        residual-replacement cadence."""
+        if self.drift_hist is None:
+            return None
+        return self.drift_hist[:int(self.corrections)]
 
 
 def pad_rounds(schedule: jnp.ndarray, s: int):
@@ -92,15 +156,27 @@ def pad_rounds(schedule: jnp.ndarray, s: int):
 def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
                tol: float = NO_TOL, check_every: int = 1,
                metric_fn: Optional[Callable] = None,
-               record_state: bool = False) -> LoopResult:
+               record_state: bool = False,
+               guard: Optional[GuardSpec] = None) -> LoopResult:
     """Drive ``R = len(xs)`` rounds of ``round_fn`` (see module docstring).
 
     xs is a pytree of arrays with a shared leading round axis.  With
     ``metric_fn=None`` this is exactly the legacy ``lax.scan`` loop;
     otherwise a ``lax.while_loop`` with early stopping at ``tol``
     (pass ``tol=NO_TOL`` to record the metric without ever stopping).
+    ``guard`` switches to the guarded while-loop driver (module
+    docstring; works with or without a metric).
     """
     R = jax.tree_util.tree_leaves(xs)[0].shape[0]
+
+    if guard is not None:
+        if record_state:
+            raise ValueError("guard= and record_state= are mutually "
+                             "exclusive (guarded runs use the while-loop "
+                             "driver, which stacks no per-round states)")
+        return _run_rounds_guarded(round_fn, state0, xs, R, tol=tol,
+                                   check_every=check_every,
+                                   metric_fn=metric_fn, guard=guard)
 
     if metric_fn is None:
         def body(state, x):
@@ -147,6 +223,103 @@ def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
         cond, body, (jnp.asarray(0), state0, hist0, jnp.asarray(0),
                      jnp.asarray(False)))
     return LoopResult(state, None, hist, nchk, k, conv)
+
+
+def _run_rounds_guarded(round_fn: Callable, state0: Any, xs: Any, R: int,
+                        *, tol: float, check_every: int,
+                        metric_fn: Optional[Callable],
+                        guard: GuardSpec) -> LoopResult:
+    """The guarded while-loop driver behind ``run_rounds(guard=...)``.
+
+    Divergence handling follows the fleet freeze idiom: the unhealthy
+    round's update is DISCARDED (``jnp.where`` keeps the pre-round
+    carry), the first bad round index and kind are stamped, and the
+    loop condition exits — the host (repro.api's escalation ladder)
+    decides what to run next from the last good state.
+    """
+    if check_every < 1:
+        raise ValueError(f"check_every must be >= 1, got {check_every}")
+    has_metric = metric_fn is not None
+    n_checks = -(-R // check_every) if has_metric else 1
+    if has_metric:
+        mdtype = jax.eval_shape(metric_fn, state0).dtype
+    else:
+        mdtype = jnp.asarray(0.0).dtype
+    hist0 = jnp.full((n_checks,), jnp.inf, mdtype)
+    tol_v = jnp.asarray(tol, mdtype)
+    blowup = jnp.asarray(guard.metric_blowup, mdtype)
+
+    has_corr = (guard.correct_fn is not None and guard.correct_every >= 1)
+    n_corr = -(-R // guard.correct_every) if has_corr else 1
+    if has_corr:
+        ddtype = jax.eval_shape(guard.correct_fn, state0)[1].dtype
+    else:
+        ddtype = mdtype
+    drift0 = jnp.zeros((n_corr,), ddtype)
+
+    def cond(carry):
+        k, _, _, _, conv, _, _, _, div, _ = carry
+        return (k < R) & jnp.logical_not(conv) & (div < 0)
+
+    def body(carry):
+        k, state, hist, nchk, _, best, dhist, ncorr, div, kind = carry
+        x = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, k, 0, keepdims=False),
+            xs)
+        new = round_fn(state, x)
+        ok = guard.health_fn(new)
+        # freeze idiom: an unhealthy update is discarded wholesale —
+        # the carry the host resumes from is the last good state
+        state = jax.tree_util.tree_map(
+            lambda nw, old: jnp.where(ok, nw, old), new, state)
+        div = jnp.where(ok, div, k)
+        kind = jnp.where(ok, kind, DIVERGED_NONFINITE)
+
+        if has_corr:
+            do_corr = ok & ((k + 1) % guard.correct_every == 0)
+
+            def correct(args):
+                st, dh, nc = args
+                st2, drift = guard.correct_fn(st)
+                return st2, dh.at[nc].set(drift), nc + 1
+
+            state, dhist, ncorr = jax.lax.cond(
+                do_corr, correct, lambda args: args, (state, dhist, ncorr))
+
+        conv = jnp.asarray(False)
+        if has_metric:
+            do_check = ok & (((k + 1) % check_every == 0) | (k + 1 == R))
+
+            def check(args):
+                st, h, n = args
+                v = metric_fn(st)
+                finite = jnp.isfinite(v)
+                blown = jnp.isfinite(best) & (v > blowup * best)
+                return (h.at[n].set(v), n + 1, finite & (v <= tol_v),
+                        jnp.logical_not(finite) | blown,
+                        jnp.where(finite, jnp.minimum(best, v), best))
+
+            def skip(args):
+                return (args[1], args[2], jnp.asarray(False),
+                        jnp.asarray(False), best)
+
+            hist, nchk, conv, bad, best = jax.lax.cond(
+                do_check, check, skip, (state, hist, nchk))
+            div = jnp.where(bad & (div < 0), k, div)
+            kind = jnp.where(bad & (kind == DIVERGED_NONE),
+                             DIVERGED_METRIC, kind)
+
+        return (k + 1, state, hist, nchk, conv, best, dhist, ncorr, div,
+                kind)
+
+    init = (jnp.asarray(0), state0, hist0, jnp.asarray(0),
+            jnp.asarray(False), jnp.asarray(jnp.inf, mdtype), drift0,
+            jnp.asarray(0), jnp.asarray(-1), jnp.asarray(DIVERGED_NONE))
+    (k, state, hist, nchk, conv, _, dhist, ncorr, div,
+     kind) = jax.lax.while_loop(cond, body, init)
+    return LoopResult(state, None, hist if has_metric else None, nchk, k,
+                      conv, dhist if has_corr else None,
+                      ncorr if has_corr else None, div, kind)
 
 
 def run_rounds_fleet(round_fn: Callable, state0: Any, xs: Any, *,

@@ -331,6 +331,79 @@ def setup_collectives(layout: str, kernel: str) -> int:
 
 
 # --------------------------------------------------------------------------
+# Guarded-solve overhead model (DESIGN.md §12): drift correction costs one
+# EXACT full matvec f = K @ alpha every ``recompute_every`` rounds — the
+# one part of the guarded protocol that is not free (the per-round
+# residual recurrence reuses the m x sb block the round already
+# evaluates, and the health predicate is O(m) elementwise).  These
+# closed forms let the autotuner pick the largest drift-correction
+# cadence that keeps modeled overhead under a budget.
+# --------------------------------------------------------------------------
+
+GUARD_OVERHEAD_BUDGET = 0.10       # default: <= 10% modeled overhead
+
+
+def guard_round_flops(m: int, n: int, kernel: str, *, b: int = 1,
+                      s: int = 1, P: int = 1, f: float = 1.0,
+                      mach: Machine = None) -> float:
+    """Flops of ONE outer round of the (s-step) solver — the denominator
+    of the overhead ratio (the guarded round itself adds only the O(m*sb)
+    recurrence update, already inside this count's epilogue term)."""
+    mach = mach or Machine()
+    mu = _mu(mach, kernel)
+    return (s * b * f * m * n / P + mu * s * b * m + s * b ** 3
+            + math.comb(s, 2) * b ** 2 + s * b * m)
+
+
+def recompute_flops(m: int, n: int, kernel: str, *, P: int = 1,
+                    f: float = 1.0, approx: str = None, landmarks: int = 0,
+                    mach: Machine = None) -> float:
+    """Flops of one exact residual recompute ``f = K @ alpha``: the full
+    m x m gram streamed block-wise through the operator (never stored)
+    for the exact representation, two O(m l) linear contractions for the
+    low-rank one."""
+    if approx:
+        return 2.0 * m * landmarks
+    mach = mach or Machine()
+    mu = _mu(mach, kernel)
+    return f * m * m * n / P + mu * m * m
+
+
+def choose_recompute_every(m: int, n: int, kernel: str, *, b: int = 1,
+                           s: int = 1, P: int = 1, f: float = 1.0,
+                           approx: str = None, landmarks: int = 0,
+                           budget: float = GUARD_OVERHEAD_BUDGET,
+                           mach: Machine = None) -> int:
+    """Smallest drift-correction cadence (in outer rounds) whose modeled
+    amortized overhead stays within ``budget``: recomputing every r
+    rounds costs ``recompute/ (r * round)`` extra, so r >= recompute /
+    (budget * round).  More frequent correction is strictly better for
+    drift, so the floor IS the choice."""
+    if budget <= 0:
+        raise ValueError(f"budget must be > 0, got {budget!r}")
+    per_round = guard_round_flops(m, n, kernel, b=b, s=s, P=P, f=f,
+                                  mach=mach)
+    rec = recompute_flops(m, n, kernel, P=P, f=f, approx=approx,
+                          landmarks=landmarks, mach=mach)
+    return max(1, math.ceil(rec / (budget * per_round)))
+
+
+def guard_overhead(m: int, n: int, kernel: str, *, b: int = 1, s: int = 1,
+                   P: int = 1, f: float = 1.0, recompute_every: int = 0,
+                   approx: str = None, landmarks: int = 0,
+                   mach: Machine = None) -> float:
+    """Modeled fractional flop overhead of guarded mode at a given
+    cadence (0 = drift correction off => only the free recurrence)."""
+    if recompute_every < 1:
+        return 0.0
+    per_round = guard_round_flops(m, n, kernel, b=b, s=s, P=P, f=f,
+                                  mach=mach)
+    rec = recompute_flops(m, n, kernel, P=P, f=f, approx=approx,
+                          landmarks=landmarks, mach=mach)
+    return rec / (recompute_every * per_round)
+
+
+# --------------------------------------------------------------------------
 # VMEM working-set model: prices a Pallas kernel's on-chip footprint so
 # the kernel sanitizer (repro.analysis.pallas_check) can flag launches
 # whose pipelined blocks + scratch cannot be VMEM-resident.

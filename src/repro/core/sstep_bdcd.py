@@ -83,7 +83,7 @@ def make_sstep_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
                              s: int,
                              gram_fn: Optional[Callable] = None,
                              op_factory: Optional[Callable] = None,
-                             op=None, lam=None,
+                             op=None, lam=None, guard: bool = False,
                              ) -> Callable:
     """``round_fn(alpha, (idx, valid)) -> alpha`` for ``loop.run_rounds``:
     one Algorithm-4 outer round; idx: (s, b), valid: (s,).  ``op``
@@ -93,14 +93,42 @@ def make_sstep_bdcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: KRRConfig,
     ``lam`` overrides ``cfg.lam`` with a TRACEABLE value — the batched
     cfg leaf of the fleet solver (repro.tune): vmapping the closure over
     per-member lam solves a whole regularization grid in lockstep on ONE
-    shared operator (DESIGN.md §10)."""
+    shared operator (DESIGN.md §10).
+
+    ``guard=True`` switches to the guarded-carry protocol
+    (``round_fn((alpha, f), xs) -> (alpha, f)`` with ``f = K @ alpha``
+    maintained by ``f += K[:, flat] @ dalpha`` — the same m x sb block
+    the fused KMV already evaluates; ``Q^T alpha`` becomes the free
+    gather ``f[flat]``, and drift correction splices an exactly
+    recomputed ``f`` back in — residual replacement for the s-step
+    recurrence; DESIGN.md §12).  Requires the operator path."""
     if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
         raise ValueError("pass at most one of gram_fn (materialized "
                          "slab), op_factory, or op (prebuilt operator)")
+    if guard and gram_fn is not None:
+        raise ValueError("guard=True requires the GramOperator path "
+                         "(gram_fn= is the legacy materialized oracle)")
     m = A.shape[0]
     inv_lam = 1.0 / (cfg.lam if lam is None else lam)
     if op is None and gram_fn is None:
         op = (op_factory or ExactGramOperator)(A, cfg.kernel)
+
+    if guard:
+        def round_fn(carry, xs):
+            alpha, f = carry                   # f = K @ alpha, (m,)
+            idx, valid = xs                    # idx: (s, b)
+            b = idx.shape[1]
+            flat = idx.reshape(s * b)
+            Gblk = op.cross_block(flat)        # (sb, sb)
+            QTalpha = f[flat]                  # Q^T alpha, free gather
+            dalpha = sstep_bdcd_inner(Gblk, QTalpha, alpha[idx], y[idx],
+                                      flat, m, inv_lam, s, b, valid)
+            d = dalpha.reshape(s * b)
+            # duplicate coordinates in ``flat`` accumulate identically
+            # in .at[].add and in the K[:, flat] @ d contraction
+            return (alpha.at[flat].add(d), f + op.apply_at(flat, d))
+
+        return round_fn
 
     def round_fn(alpha, xs):
         idx, valid = xs                        # idx: (s, b)

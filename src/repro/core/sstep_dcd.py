@@ -79,7 +79,7 @@ def make_sstep_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
                             s: int,
                             gram_fn: Optional[Callable] = None,
                             op_factory: Optional[Callable] = None,
-                            op=None, C=None,
+                            op=None, C=None, guard: bool = False,
                             ) -> Callable:
     """``round_fn(alpha, (idx_s, valid)) -> alpha`` for ``loop.run_rounds``:
     one Algorithm-2 outer round (communication phase + s local solves).
@@ -92,15 +92,40 @@ def make_sstep_dcd_round_fn(A: jnp.ndarray, y: jnp.ndarray, cfg: SVMConfig,
     leaf of the fleet solver (repro.tune): vmapping the closure over
     per-member C's solves a whole C-grid in lockstep on ONE shared
     operator (DESIGN.md §10).
+
+    ``guard=True`` switches to the guarded-carry protocol
+    (``round_fn((alpha, f), xs) -> (alpha, f)`` with ``f = Ktil @
+    alpha`` maintained by the residual recurrence ``f += Ktil[:, idx_s]
+    @ thetas`` — the same m x s column block the fused KMV already
+    evaluates, so per-round kernel work is unchanged; DESIGN.md §12).
+    ``U^T alpha`` becomes the free gather ``f[idx_s]`` and drift
+    correction can splice an exactly recomputed ``f`` back in (residual
+    replacement, Devarakonda et al. 2016).  Requires the operator path.
     """
     if sum(x is not None for x in (gram_fn, op_factory, op)) > 1:
         raise ValueError("pass at most one of gram_fn (materialized "
                          "slab), op_factory, or op (prebuilt operator)")
+    if guard and gram_fn is not None:
+        raise ValueError("guard=True requires the GramOperator path "
+                         "(gram_fn= is the legacy materialized oracle)")
     from .dcd import _nu_omega
     Atil = y[:, None] * A
     nu, omega = _nu_omega(cfg, C)
     if op is None and gram_fn is None:
         op = (op_factory or ExactGramOperator)(Atil, cfg.kernel)
+
+    if guard:
+        def round_fn(carry, xs):
+            alpha, f = carry                     # f = Ktil @ alpha, (m,)
+            idx_s, valid = xs
+            G0 = op.cross_block(idx_s)           # (s, s)
+            u_dot_alpha = f[idx_s]               # U^T alpha, free gather
+            thetas = sstep_dcd_inner(G0, u_dot_alpha, alpha[idx_s],
+                                     idx_s, nu, omega, s, valid)
+            return (alpha.at[idx_s].add(thetas),
+                    f + op.apply_at(idx_s, thetas))
+
+        return round_fn
 
     def round_fn(alpha, xs):
         idx_s, valid = xs

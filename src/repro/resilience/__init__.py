@@ -1,0 +1,28 @@
+"""Guarded solves: drift correction, divergence detection with
+auto-fallback, mid-solve checkpoint/resume, and fault injection
+(DESIGN.md §12).
+
+The paper's s-step solvers are "the same solution in exact arithmetic",
+but in finite precision the guarded protocol's residual ``f = K @
+alpha`` is maintained by a long recurrence of fused updates — the
+classic s-step/CA failure mode that residual replacement counters
+(Devarakonda et al. 2016).  This package supplies the pieces the shared
+round protocol (``core/loop.run_rounds(guard=...)``) and the facade
+executor (``repro.api``) thread through every solver family:
+
+  guard.py       jit-safe health predicate, residual init / exact
+                 recompute (drift correction), the escalation ladder
+  health.py      structured HealthEvent / SolveHealth records
+                 (``FitResult.health``)
+  checkpoint.py  mid-solve snapshot/resume over train/checkpoint.py
+  faults.py      deterministic fault injection for tests: NaN/Inf into
+                 carries, one shard's psum contribution, kill/restart
+"""
+from .guard import (DivergenceError, finite_health, init_residual,
+                    make_correct_fn, next_fallback, LADDER_HALVE_S,
+                    LADDER_CLASSICAL, LADDER_F64)
+from .health import HealthEvent, SolveHealth
+from .checkpoint import (SOLVE_STATE_KEYS, load_solve_state,
+                         save_solve_state, solve_fingerprint)
+from .faults import (FaultPlan, SimulatedKill, active_plan, inject,
+                     poisoned_1d_factory)

@@ -1,0 +1,176 @@
+"""Mid-solve checkpoint/resume for guarded fits (DESIGN.md §12).
+
+Thin, typed layer over the generic ``train/checkpoint.py`` machinery
+(atomic step directories, one .npy per pytree leaf, async writes):
+
+  * ``save_solve_state``/``load_solve_state`` snapshot the guarded
+    carry ``(alpha, f)`` plus the host bookkeeping needed to continue —
+    iterations consumed, the CURRENT ladder position (s/method may have
+    fallen back mid-run), and a solve fingerprint.
+  * The fingerprint pins everything the deterministic replay depends on
+    (problem, shapes, config, schedule seed); ``fit(resume_from=...)``
+    refuses to resume a checkpoint from a different solve — resuming
+    under a different schedule or config would silently compute garbage.
+  * ``save_fit``/``load_fit`` round-trip a completed ``FitResult``
+    (arrays as leaves, host scalars/options as JSON meta) together with
+    its ``GramOperator`` — exact or Nystrom; operators are registered
+    pytrees, so the generic leaf machinery handles them once the
+    template supplies the static aux data.
+
+Checkpoints are cut at outer-round boundaries, so a resumed solve
+replays the SAME round decomposition from the snapshot round — the
+continuation is bit-identical to the uninterrupted run modulo the
+restart round (acceptance: the resumed solve reaches the same
+tolerance-stop solution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.checkpoint import (CheckpointManager, available_steps,
+                                    load_checkpoint, save_checkpoint)
+
+SOLVE_STATE_KEYS = ("alpha", "f")
+
+
+def solve_fingerprint(problem: str, m: int, dtype, cfg, opts) -> dict:
+    """Everything a valid resume must match: the schedule replay is
+    deterministic in (seed, max_iters, m, b), and the iterate sequence
+    additionally depends on the problem config.  The CURRENT ladder
+    position (s/method) is deliberately NOT here — it is resume STATE
+    (stored alongside), not identity."""
+    return {
+        "problem": problem,
+        "m": int(m),
+        "dtype": str(dtype),
+        "cfg": repr(cfg),
+        "b": int(opts.b if problem == "krr" else 1),
+        "seed": int(opts.seed),
+        "max_iters": int(opts.max_iters),
+        "layout": opts.layout,
+    }
+
+
+def save_solve_state(manager: CheckpointManager, iters_done: int,
+                     alpha, f, *, s_cur: int, method_cur: str,
+                     fingerprint: dict) -> None:
+    """Async snapshot at an outer-round boundary (``iters_done`` inner
+    iterations consumed).  ``f`` may be None (distributed layouts carry
+    only alpha; the residual is recomputed on resume)."""
+    tree = {"alpha": alpha}
+    if f is not None:
+        tree["f"] = f
+    manager.save_async(iters_done, tree,
+                       extra={"iters_done": int(iters_done),
+                              "s_cur": int(s_cur),
+                              "method_cur": method_cur,
+                              "has_f": f is not None,
+                              "fingerprint": fingerprint})
+
+
+def load_solve_state(directory: str, *,
+                     expect_fingerprint: Optional[dict] = None
+                     ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], dict]:
+    """Latest snapshot in ``directory`` -> ``(alpha, f, extra)``.
+
+    Raises ``FileNotFoundError`` when empty and ``ValueError`` on a
+    fingerprint mismatch (naming every differing field)."""
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(
+            f"resume_from={directory!r}: no checkpoints found")
+    tree, meta = load_checkpoint(directory, step=steps[-1])
+    extra = meta["extra"]
+    if expect_fingerprint is not None:
+        saved = extra.get("fingerprint", {})
+        bad = {k: (saved.get(k), v) for k, v in expect_fingerprint.items()
+               if saved.get(k) != v}
+        if bad:
+            detail = ", ".join(f"{k}: checkpoint={s!r} vs fit={v!r}"
+                               for k, (s, v) in sorted(bad.items()))
+            raise ValueError(
+                f"resume_from={directory!r} belongs to a different "
+                f"solve — mismatched fingerprint fields: {detail}")
+    # leaves come back path-sorted by the template-free loader: the
+    # meta paths name them
+    by_path = dict(zip(meta["paths"], tree))
+    alpha = jnp.asarray(by_path["alpha"])
+    f = jnp.asarray(by_path["f"]) if extra.get("has_f") else None
+    return alpha, f, extra
+
+
+def save_fit(directory: str, result, op=None, step: int = 0) -> str:
+    """Persist a completed ``FitResult`` (+ optionally its operator).
+
+    Arrays travel as checkpoint leaves; host scalars, the resolved
+    ``SolverOptions`` and the comm model go to JSON meta.  ``plan`` and
+    ``health`` are session objects and are not persisted."""
+    arrays = {"alpha": result.alpha, "schedule": result.schedule}
+    if result.history is not None:
+        arrays["history"] = np.asarray(result.history)
+    tree = {"arrays": arrays}
+    if op is not None:
+        tree["op"] = op
+    meta = {
+        "metric": result.metric,
+        "converged": bool(result.converged),
+        "rounds_run": int(result.rounds_run),
+        "iters_run": int(result.iters_run),
+        "wall_time_s": float(result.wall_time_s),
+        # comm is the modeled_fit_cost dict: numeric terms plus config
+        # echoes like approx (possibly None) — all JSON-native already
+        "comm": {k: (float(v) if isinstance(v, float) else v)
+                 for k, v in result.comm.items()},
+        # a live Mesh is a device handle, not state — resumable options
+        # rebuild the auto mesh on the restoring host
+        "options": {**dataclasses.asdict(result.options), "mesh": None},
+        "representation": result.representation,
+        "has_history": result.history is not None,
+        "has_op": op is not None,
+    }
+    return save_checkpoint(directory, step, tree, extra={"fit": meta})
+
+
+def load_fit(directory: str, op_template: Any = None, step: int = 0):
+    """Inverse of ``save_fit`` -> ``(FitResult, op)``.
+
+    ``op_template`` must be an operator with the same STRUCTURE as the
+    saved one (pytree aux data — configs, static ints — lives in the
+    treedef, not on disk); pass the live operator or a zeros-like
+    clone.  ``op`` is None when the fit was saved without one."""
+    from repro.api import FitResult, SolverOptions
+
+    steps = available_steps(directory)
+    if step not in steps:
+        raise FileNotFoundError(
+            f"no step {step} in {directory!r} (have {steps})")
+    _, meta = load_checkpoint(directory, step=step)
+    fit = meta["extra"]["fit"]
+    # 0 is a LEAF placeholder (None would be an empty pytree node and
+    # drop the slot from the template structure)
+    arrays = {"alpha": 0, "schedule": 0}
+    if fit["has_history"]:
+        arrays["history"] = 0
+    template = {"arrays": arrays}
+    if fit["has_op"]:
+        if op_template is None:
+            raise ValueError("checkpoint contains an operator; pass "
+                             "op_template= with the matching structure")
+        template["op"] = op_template
+    tree, _ = load_checkpoint(directory, step=step, template=template)
+    arrs = tree["arrays"]
+    result = FitResult(
+        alpha=jnp.asarray(arrs["alpha"]),
+        schedule=jnp.asarray(arrs["schedule"]),
+        history=(np.asarray(arrs["history"]) if fit["has_history"]
+                 else None),
+        metric=fit["metric"], converged=fit["converged"],
+        rounds_run=fit["rounds_run"], iters_run=fit["iters_run"],
+        wall_time_s=fit["wall_time_s"], comm=fit["comm"],
+        options=SolverOptions(**fit["options"]),
+        representation=fit["representation"])
+    return result, tree.get("op")

@@ -1,0 +1,126 @@
+"""Deterministic fault injection for guarded-solve tests (DESIGN.md §12).
+
+Recovery paths that are never exercised are recovery theater: this
+harness lets tier-1 tests inject the exact failures the guard exists
+for, at deterministic points, and assert end-to-end recovery:
+
+  * ``FaultPlan(nan_at_iter=...)`` — the facade executor arms the
+    jit-safe fault lane of its guarded chunk: at the round containing
+    the given inner iteration, ``value`` (NaN/Inf) is added to the
+    chosen carry leaf.  The fault fires ONCE (the executor consumes it
+    after the divergence is observed), so the escalation ladder descends
+    exactly one rung per injected fault.
+  * ``FaultPlan(kill_at_iter=...)`` — the executor raises
+    ``SimulatedKill`` at the first checkpoint boundary at/after the
+    given iteration (after the snapshot is durable), simulating
+    preemption; the test then re-fits with ``resume_from=``.
+  * ``poisoned_1d_factory`` — an ``op_factory`` for the 1d solvers that
+    scales ONE rank's local column shard before the all-reduce, so that
+    shard's psum contribution is corrupted (NaN scale) or perturbed
+    (finite scale) consistently across every round of a chunk.
+
+Faults are armed with the ``inject`` context manager; production code
+never consults this module unless a plan is active.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+FAULT_TARGETS = ("f", "alpha")
+
+
+class SimulatedKill(RuntimeError):
+    """Raised by the executor to simulate preemption mid-solve.  The
+    checkpoint written just before the raise is durable — catch this and
+    re-fit with ``resume_from=`` to exercise the recovery path."""
+
+    def __init__(self, message: str, checkpoint_dir: str):
+        super().__init__(message)
+        self.checkpoint_dir = checkpoint_dir
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One deterministic fault scenario.
+
+    nan_at_iter: global inner-iteration index; the fault fires in the
+                 round containing it.  None = no carry fault.
+    value:       what is added to the target leaf (NaN default, or Inf).
+    target:      which guarded-carry leaf to poison: "f" (the residual
+                 recurrence — the s-step failure mode) or "alpha".
+    kill_at_iter: simulate preemption at the first checkpoint boundary
+                 at/after this iteration.  None = no kill.
+    """
+
+    nan_at_iter: Optional[int] = None
+    value: float = float("nan")
+    target: str = "f"
+    kill_at_iter: Optional[int] = None
+    # one-shot bookkeeping (set by the executor)
+    carry_fired: bool = False
+    kill_fired: bool = False
+
+    def __post_init__(self):
+        if self.target not in FAULT_TARGETS:
+            raise ValueError(f"target must be one of {FAULT_TARGETS}, "
+                             f"got {self.target!r}")
+
+    def carry_fault_round(self, pos: int, seg_iters: int, s: int) -> int:
+        """Round index WITHIN the segment [pos, pos + seg_iters) where
+        the carry fault should fire, or -1 (none/already fired)."""
+        if self.nan_at_iter is None or self.carry_fired:
+            return -1
+        if not pos <= self.nan_at_iter < pos + seg_iters:
+            return -1
+        return (self.nan_at_iter - pos) // s
+
+    def should_kill(self, pos: int) -> bool:
+        """Whether the executor should simulate preemption at the
+        checkpoint boundary after ``pos`` consumed iterations."""
+        return (self.kill_at_iter is not None and not self.kill_fired
+                and pos >= self.kill_at_iter)
+
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan):
+    """Arm ``plan`` for every guarded fit inside the block."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = prev
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+def poisoned_1d_factory(axis_name: str = "model", rank: int = 0,
+                        scale: float = float("nan")):
+    """``op_factory(A_loc, kcfg)`` for the 1d solvers that corrupts ONE
+    rank's shard before the round all-reduce: its psum contribution is
+    scaled by ``scale`` (NaN poisons the collective; a large finite
+    scale perturbs it).  Linear kernels only — the RBF operator needs
+    the psummed row norms, which this factory deliberately does not
+    recompute from poisoned data."""
+    from repro.core.distributed import AllreduceGramOperator
+
+    def factory(A_loc, kcfg):
+        if kcfg.name != "linear":
+            raise ValueError("poisoned_1d_factory supports linear "
+                             f"kernels only, got {kcfg.name!r}")
+        r = jax.lax.axis_index(axis_name)
+        fac = jnp.where(r == rank, jnp.asarray(scale, A_loc.dtype),
+                        jnp.ones((), A_loc.dtype))
+        return AllreduceGramOperator(axis_name, A_loc * fac, kcfg, None)
+
+    return factory

@@ -1,0 +1,98 @@
+"""The jit-safe half of the guarded-solve layer (DESIGN.md §12).
+
+Everything here is consumed by ``core.loop._run_rounds_guarded`` through
+a ``GuardSpec``: the health predicate runs after EVERY round on the new
+carry (an unhealthy update is discarded and the loop freezes on the last
+good state), and the correction closure performs residual replacement —
+recompute ``f = K @ alpha`` exactly through the ``GramOperator`` (one
+extra KMV, never a stored gram) and splice it back into the carry,
+recording the observed relative drift.
+
+The escalation ladder is the HOST-side policy the facade walks when a
+guarded run reports divergence: halve s (s-step -> shallower s-step ->
+classical at s=1) then retry in f64 accumulation.  Every rung solves the
+SAME problem — the s-step decomposition is mathematically equivalent at
+every s — so falling back resumes from the last good state instead of
+restarting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DivergenceError(RuntimeError):
+    """A guarded solve diverged and the escalation ladder was exhausted
+    (or fallback was disabled).  Carries the structured ``events`` the
+    run observed before giving up."""
+
+    def __init__(self, message: str, events: tuple = ()):
+        super().__init__(message)
+        self.events = events
+
+
+def finite_health(state) -> jnp.ndarray:
+    """Scalar bool: every leaf of the carry is finite.  O(carry) reads,
+    no reductions beyond ``all`` — cheap enough to run every round."""
+    leaves = jax.tree_util.tree_leaves(state)
+    return functools.reduce(
+        jnp.logical_and, [jnp.all(jnp.isfinite(leaf)) for leaf in leaves])
+
+
+def init_residual(op, alpha0: jnp.ndarray) -> jnp.ndarray:
+    """f_0 = K @ alpha_0 through the operator.  Cold starts (alpha_0 ==
+    0, the overwhelmingly common case) skip the matvec entirely — this
+    runs host-side before the jitted chunk, so the data-dependent branch
+    is free."""
+    import numpy as np
+    if not np.any(np.asarray(jax.device_get(alpha0))):
+        return jnp.zeros_like(alpha0)
+    return op.full_matvec(alpha0)
+
+
+def make_correct_fn(op):
+    """``correct_fn(state) -> (state', drift)`` for ``GuardSpec``:
+    residual replacement.  ``drift`` is the relative error of the
+    recurrence-maintained residual vs. the exact recompute — the
+    quantity the paper's stability experiments track."""
+
+    def correct_fn(state):
+        alpha, f = state
+        f_exact = op.full_matvec(alpha)
+        drift = (jnp.linalg.norm(f - f_exact)
+                 / (jnp.linalg.norm(f_exact) + 1e-30))
+        return (alpha, f_exact), drift
+
+    return correct_fn
+
+
+# Escalation-ladder rungs, in the order the facade tries them.
+LADDER_HALVE_S = "halve_s"
+LADDER_CLASSICAL = "classical"
+LADDER_F64 = "f64"
+
+
+def next_fallback(s: int, method: str, x64: bool
+                  ) -> Tuple[str, int, str, bool]:
+    """One rung down the ladder from the current (s, method, x64) state.
+
+    Returns ``(action, s', method', x64')``; raises ``DivergenceError``
+    when the ladder is exhausted (already classical AND f64).  Halving
+    is repeated until s == 1 — each step is a strictly more conservative
+    round decomposition of the SAME iterate sequence — then the method
+    itself drops to classical, then accumulation widens to f64.
+    """
+    if method == "sstep" and s > 1:
+        s2 = max(1, s // 2)
+        return (f"{LADDER_HALVE_S}:{s}->{s2}", s2, method, x64)
+    if method == "sstep":
+        return (LADDER_CLASSICAL, 1, "classical", x64)
+    if not x64:
+        return (LADDER_F64, s, method, True)
+    raise DivergenceError(
+        "escalation ladder exhausted: classical method in f64 "
+        "accumulation still diverges — the problem data or "
+        "regularization is pathological")

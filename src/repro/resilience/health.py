@@ -1,0 +1,81 @@
+"""Structured health records for guarded solves (DESIGN.md §12).
+
+``SolveHealth`` is the host-side ledger ``fit`` attaches to
+``FitResult.health`` when ``SolverOptions.guard`` is on: the observed
+residual drift at every correction, every divergence/fallback event the
+escalation ladder walked, and the checkpoint/resume bookkeeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+# What the guard observed (HealthEvent.kind).
+KIND_NONFINITE = "nonfinite"       # NaN/Inf appeared in the carry
+KIND_METRIC = "metric"             # gap/residual blow-up or non-finite
+KIND_RESUME = "resume"             # solve restored from a checkpoint
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthEvent:
+    """One guard observation and the action taken on it.
+
+    kind:    "nonfinite" | "metric" | "resume".
+    round_idx: 0-based OUTER round (within the whole solve) of the first
+             unhealthy round — the update of that round was DISCARDED;
+             the solve resumed from the carry before it.
+    iter_idx: the matching inner-iteration offset into the schedule.
+    action:  what the executor did: "halve_s:16->8" | "classical" |
+             "f64" | "resume" | "raise".
+    detail:  free-form context (metric value, checkpoint path, ...).
+    """
+
+    kind: str
+    round_idx: int
+    iter_idx: int
+    action: str
+    detail: str = ""
+
+
+# repro: noqa[CHK-PYTREE] host-side health ledger — built by the facade
+#   executor AFTER every jit boundary has been crossed (drift arrays are
+#   device_get numpy); it is never passed into a traced function.
+@dataclasses.dataclass
+class SolveHealth:
+    """Everything the guarded executor observed across one ``fit``.
+
+    guarded:          the guard was on (False => a plain solve).
+    recompute_every:  resolved drift-correction cadence in outer rounds
+                      (0 = correction off).
+    drift:            (n_corrections,) observed relative drift at each
+                      residual replacement, concatenated across
+                      segments/fallbacks in execution order.
+    corrections:      == len(drift).
+    events:           every HealthEvent in execution order.
+    checkpoints:      snapshots written by THIS fit.
+    resumed_from:     checkpoint path the solve restored from, or None.
+    """
+
+    guarded: bool = False
+    recompute_every: int = 0
+    drift: Optional[np.ndarray] = None
+    corrections: int = 0
+    events: Tuple[HealthEvent, ...] = ()
+    checkpoints: int = 0
+    resumed_from: Optional[str] = None
+
+    @property
+    def max_drift(self) -> float:
+        """Largest observed relative residual drift (0.0 when no
+        correction ever ran)."""
+        if self.drift is None or len(self.drift) == 0:
+            return 0.0
+        return float(np.max(self.drift))
+
+    @property
+    def fallbacks(self) -> Tuple[HealthEvent, ...]:
+        """The subset of events where the escalation ladder fired."""
+        return tuple(e for e in self.events
+                     if e.kind in (KIND_NONFINITE, KIND_METRIC))

@@ -29,12 +29,42 @@ import jax
 import numpy as np
 
 
+def _key_str(k) -> str:
+    # jax path keys carry their payload under different attribute names:
+    # DictKey/FlattenedIndexKey -> .key, SequenceKey -> .idx,
+    # GetAttrKey (registered dataclasses / *_with_keys pytrees) -> .name.
+    # The old fallback str(k) turned GetAttrKey into ".A" — garbage paths
+    # for every registered GramOperator leaf.
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
 def _paths_and_leaves(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                      for k in path) for path, _ in flat]
+    paths = ["/".join(_key_str(k) for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return paths, leaves
+
+
+def _to_npy(arr: np.ndarray):
+    """(savable_array, dtype_str).  Extension dtypes (bfloat16, float8_*
+    from ml_dtypes — numpy kind 'V') are not representable in the .npy
+    header and silently round-trip as raw void bytes; store them
+    bit-exactly as a same-itemsize uint view and record the true dtype
+    in meta so ``_from_npy`` can reinterpret."""
+    dtype = str(arr.dtype)
+    if arr.dtype.kind == "V":
+        arr = arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32,
+                        8: np.uint64}[arr.dtype.itemsize])
+    return arr, dtype
+
+
+def _from_npy(arr: np.ndarray, dtype: Optional[str]) -> np.ndarray:
+    if dtype is None or str(arr.dtype) == dtype:
+        return arr
+    return arr.view(np.dtype(dtype))     # bit-exact reinterpretation
 
 
 def save_checkpoint(directory: str, step: int, tree: Any,
@@ -45,9 +75,13 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
+    dtypes = []
     for i, arr in enumerate(host):
-        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
-    meta = {"step": step, "paths": paths, "extra": extra or {}}
+        savable, dtype = _to_npy(arr)
+        dtypes.append(dtype)
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), savable)
+    meta = {"step": step, "paths": paths, "dtypes": dtypes,
+            "extra": extra or {}}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
     if os.path.exists(final):
@@ -68,8 +102,9 @@ def load_checkpoint(directory: str, step: Optional[int] = None,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
-    arrs = [np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
-            for i in range(len(meta["paths"]))]
+    dtypes = meta.get("dtypes") or [None] * len(meta["paths"])
+    arrs = [_from_npy(np.load(os.path.join(path, f"leaf_{i:05d}.npy")), dt)
+            for i, dt in zip(range(len(meta["paths"])), dtypes)]
     if template is not None:
         treedef = jax.tree_util.tree_structure(template)
         tree = jax.tree_util.tree_unflatten(treedef, arrs)

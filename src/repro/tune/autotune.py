@@ -154,6 +154,23 @@ def resolve_options(m: int, n: int, cfg, opts, *, problem: str = "krr",
     resolved = dataclasses.replace(
         opts, s=winner["s"], b=winner["b"], layout=winner["layout"],
         approx=winner["approx"])
+    if resolved.guard and resolved.recompute_every == AUTO:
+        # price drift correction for the WINNER (s, b, layout): the
+        # cadence that keeps guarded overhead under the budget.  The
+        # distributed layouts recompute from alpha every round — no
+        # drifting residual, correction off (see repro.resilience).
+        if winner["layout"] == "serial":
+            from repro.core.perf_model import choose_recompute_every
+            rec = choose_recompute_every(
+                m, n, cfg.kernel.name,
+                b=winner["b"] if problem == "krr" else 1,
+                s=winner["s"], mach=mach,
+                approx=bool(winner["approx"]),
+                landmarks=min(opts.landmarks, m) if winner["approx"]
+                else 0)
+        else:
+            rec = 0
+        resolved = dataclasses.replace(resolved, recompute_every=rec)
     return TunedPlan(options=resolved,
                      modeled=_price(m, n, cfg, resolved, problem,
                                     winner["layout"], mach),

@@ -244,6 +244,44 @@ def test_unknown_axis_name_caught():
     assert "CHK-AXIS" in {f.check for f in found}
 
 
+# ------------------------------------------------- CHK-CARRY (guard) ----
+
+def test_guard_check_accepts_real_carries():
+    """The real guarded families + the real health predicate: every
+    carry leaf is covered, no findings."""
+    from repro.analysis import guard_check
+    assert guard_check.run() == []
+
+
+def test_guard_check_flags_blind_predicate(monkeypatch):
+    """A predicate that reads only the first carry leaf leaves the rest
+    unguarded — CHK-CARRY must fire for each missed floating leaf, per
+    family, anchored at the factory def line."""
+    from repro.analysis import guard_check
+
+    def half_blind(state):
+        leaves = jax.tree_util.tree_leaves(state)
+        return jnp.all(jnp.isfinite(leaves[0]))
+
+    monkeypatch.setattr(guard_check, "finite_health", half_blind)
+    found = guard_check.run()
+    assert found and all(f.check == "CHK-CARRY" for f in found)
+    assert all(f.severity == ERROR for f in found)
+    assert len(found) == 4                    # one missed leaf x family
+    assert all(f.line > 0 and f.path.endswith(".py") for f in found)
+
+
+def test_guard_check_flags_rejecting_predicate(monkeypatch):
+    """A predicate that rejects healthy carries freezes every guarded
+    solve at round 0 — also a finding."""
+    from repro.analysis import guard_check
+    monkeypatch.setattr(guard_check, "finite_health",
+                        lambda state: jnp.asarray(False))
+    found = guard_check.run()
+    assert len(found) == 4
+    assert all("rejects a finite" in f.message for f in found)
+
+
 # --------------------------------------------------------- tree gate -----
 
 def test_tree_is_clean_under_full_analysis():

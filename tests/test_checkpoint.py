@@ -87,6 +87,84 @@ def test_preemption_resume_bit_exact(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_extension_dtype_roundtrip(tmp_path):
+    """bfloat16 (a numpy extension dtype, kind 'V') must survive the
+    .npy round-trip bit-for-bit — regression: it used to come back as a
+    raw void view."""
+    t = {"w": jnp.arange(16, dtype=jnp.bfloat16) / 7,
+         "b": jnp.ones((3,), jnp.float16)}
+    save_checkpoint(str(tmp_path), 1, t)
+    got, _ = load_checkpoint(str(tmp_path), template=t)
+    assert got["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got["w"]).view(np.uint16),
+                                  np.asarray(t["w"]).view(np.uint16))
+    assert got["b"].dtype == jnp.float16
+
+
+def test_operator_pytree_roundtrip(tmp_path):
+    """A registered-pytree GramOperator round-trips through the generic
+    leaf machinery — regression: attribute path keys used to render as
+    garbage ('.A'), colliding across operators."""
+    from repro.core.kernels import ExactGramOperator, KernelConfig
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((8, 3)), jnp.float32)
+    op = ExactGramOperator(A, KernelConfig("rbf", sigma=0.5))
+    save_checkpoint(str(tmp_path), 2, {"op": op, "alpha": jnp.ones(8)})
+    got, meta = load_checkpoint(str(tmp_path), step=2,
+                                template={"op": op,
+                                          "alpha": jnp.zeros(8)})
+    # paths must name the leaves distinctly (not a bare attr fallback)
+    assert len(set(meta["paths"])) == len(meta["paths"])
+    np.testing.assert_array_equal(np.asarray(got["op"].A), np.asarray(A))
+    assert got["op"].cfg == op.cfg
+
+
+def test_save_fit_load_fit_roundtrip(tmp_path):
+    """A completed FitResult + its operator round-trip through
+    repro.resilience.checkpoint.save_fit/load_fit."""
+    from repro.api import KernelRidge, SolverOptions
+    from repro.resilience.checkpoint import load_fit, save_fit
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.standard_normal((32, 4)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(32), jnp.float32)
+    kr = KernelRidge(lam=0.5, kernel="linear",
+                     options=SolverOptions(max_iters=32, record=True))
+    res = kr.fit(A, y)
+    save_fit(str(tmp_path), res, op=kr.op_)
+    res2, op2 = load_fit(str(tmp_path), op_template=kr.op_)
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(res2.alpha))
+    np.testing.assert_array_equal(np.asarray(res.schedule),
+                                  np.asarray(res2.schedule))
+    np.testing.assert_array_equal(np.asarray(res.history),
+                                  np.asarray(res2.history))
+    assert res2.converged == res.converged
+    assert res2.options.max_iters == 32
+    np.testing.assert_array_equal(np.asarray(op2.A), np.asarray(A))
+
+
+def test_solve_state_fingerprint_mismatch(tmp_path):
+    """load_solve_state refuses a checkpoint from a different solve and
+    names the mismatched fingerprint fields."""
+    import pytest
+    from repro.resilience.checkpoint import (load_solve_state,
+                                             save_solve_state)
+    mgr = CheckpointManager(str(tmp_path), save_every=1)
+    fp = {"problem": "krr", "m": 32, "seed": 0}
+    save_solve_state(mgr, 16, jnp.ones(32), jnp.zeros(32),
+                     s_cur=4, method_cur="sstep", fingerprint=fp)
+    mgr.wait()
+    alpha, f, extra = load_solve_state(str(tmp_path),
+                                       expect_fingerprint=fp)
+    assert extra["iters_done"] == 16 and extra["s_cur"] == 4
+    assert f is not None
+    with pytest.raises(ValueError, match="seed"):
+        load_solve_state(str(tmp_path),
+                         expect_fingerprint={**fp, "seed": 7})
+    with pytest.raises(FileNotFoundError):
+        load_solve_state(str(tmp_path / "empty"))
+
+
 def test_elastic_restore_resharding(tmp_path):
     """Checkpoint written replicated restores onto a sharded layout (the
     1-device degenerate case exercises the device_put path)."""

@@ -102,3 +102,37 @@ def test_sstep_bdcd_converges_to_closed_form_large_s():
     sched = block_schedule(jax.random.key(11), 512, 48, 4)
     a, _ = sstep_bdcd_krr(A, y, jnp.zeros(48), sched, cfg, s=256)
     assert float(relative_solution_error(a, astar)) < 1e-3
+
+
+@pytest.mark.parametrize("s", [8, 32, 256])
+@pytest.mark.parametrize("problem", ["ksvm", "krr"])
+def test_guarded_sstep_stability_matrix(problem, s):
+    """Numerical-stability matrix (DESIGN.md §12): the GUARDED s-step
+    path — residual recurrence + periodic drift correction — matches the
+    classical iterates in f32 even at deep s, and the recorded drift
+    stays at roundoff level (no divergent residual-error growth in s)."""
+    from repro.api import KernelRidge, KernelSVM, SolverOptions
+
+    key = jax.random.key(20)
+    H = 512
+    opts = dict(max_iters=H, seed=5, slab_free=True)
+    # cadence 1: s=256 leaves only ceil(512/256)=2 outer rounds, so the
+    # correction must fire every round to be exercised at every s
+    guard = dict(guard=True, recompute_every=1)
+    if problem == "ksvm":
+        A, y = classification_dataset(key, m=96, n=24)
+        mk = lambda **kw: KernelSVM(
+            C=1.0, kernel=KernelConfig("rbf", sigma=1.0),
+            options=SolverOptions(**opts, **kw))
+    else:
+        A, y = regression_dataset(key, m=96, n=12)
+        mk = lambda **kw: KernelRidge(
+            lam=0.5, kernel=KernelConfig("rbf", sigma=1.0),
+            options=SolverOptions(b=4, **opts, **kw))
+    classical = mk(method="classical").fit(A, y)
+    deep = mk(method="sstep", s=s, **guard).fit(A, y)
+    np.testing.assert_allclose(np.asarray(deep.alpha),
+                               np.asarray(classical.alpha),
+                               rtol=2e-4, atol=2e-5)
+    assert deep.health.corrections > 0
+    assert deep.health.max_drift < 1e-4
