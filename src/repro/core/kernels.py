@@ -251,6 +251,23 @@ class GramOperator:
     def n_samples(self) -> int:
         raise NotImplementedError
 
+    @property
+    def feature_dim(self) -> Optional[int]:
+        """Width of the RAW query rows ``serve_block`` accepts, or None
+        when the representation cannot serve new points (a low-rank
+        factor without its feature map).  The serve-side eager
+        validators (``core.predict.validate_queries``,
+        ``serve.engine.ServingEngine.submit``) check incoming queries
+        against this instead of letting a shape mismatch explode inside
+        jit with an unattributable error."""
+        raise NotImplementedError
+
+    @property
+    def dtype(self):
+        """Dtype of the representation's data leaves — what query blocks
+        must arrive as (serving never silently up/down-casts)."""
+        raise NotImplementedError
+
     def scale_rows(self, y: jnp.ndarray) -> "GramOperator":
         raise NotImplementedError
 
@@ -321,6 +338,14 @@ class ExactGramOperator(GramOperator):
     @property
     def n_samples(self) -> int:
         return self.A.shape[0]
+
+    @property
+    def feature_dim(self) -> int:
+        return self.A.shape[1]
+
+    @property
+    def dtype(self):
+        return self.A.dtype
 
     def scale_rows(self, y: jnp.ndarray) -> "ExactGramOperator":
         """Operator over ``diag(y) A`` — the solvers' K-SVM data scaling
@@ -393,6 +418,18 @@ class LowRankGramOperator(GramOperator):
     @property
     def rank(self) -> int:
         return self.Phi.shape[1]
+
+    @property
+    def feature_dim(self) -> Optional[int]:
+        # queries arrive in RAW feature space and go through the map;
+        # without a map the operator cannot serve new points at all
+        if self.fmap is None:
+            return None
+        return self.fmap.landmarks.shape[1]
+
+    @property
+    def dtype(self):
+        return self.Phi.dtype
 
     def scale_rows(self, y: jnp.ndarray) -> "LowRankGramOperator":
         """``diag(y) K~ diag(y) == (diag(y) Phi)(diag(y) Phi)^T``

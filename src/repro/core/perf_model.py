@@ -250,6 +250,172 @@ def modeled_predict_cost(m: int, n: int, q: int, kernel: str, *,
 
 
 # --------------------------------------------------------------------------
+# Serving latency model (DESIGN.md §13): continuous batching with a full
+# drain per engine step.  Each step admits every queued request (up to
+# the ``slots`` admission window) and serves them as ONE bucketed block
+# through ``core/predict.py``; the step duration IS the batch window.
+# Deterministic-drain queueing: a request arrives uniformly within the
+# current step, waits for the step boundary, and is served by the next
+# step — latency in (T, 2T] for steady step time T, so p50 = 1.5 T and
+# p99 = 1.99 T.  The steady step time follows the predictor's
+# power-of-two BUCKETS (an admitted batch of 13 pads to 16 and costs
+# 16), so the model iterates the bucketed drain recurrence instead of
+# assuming a linear T(b).  ``benchmarks/fig9_serve.py`` measures the
+# engine against exactly this model (with gamma/dispatch calibrated
+# on-host).
+# --------------------------------------------------------------------------
+
+SERVE_DISPATCH_S = 50e-6           # per-block host->device dispatch cost
+
+
+def serve_bucket(q: float, slots: int) -> int:
+    """The power-of-two block shape a q-row admission pads to (mirrors
+    ``BatchedPredictor.block_shape``: minimum bucket 8, capped at the
+    admission window)."""
+    q = max(int(-(-q // 1)), 1)
+    if q >= slots:
+        return slots
+    return min(slots, max(8, 1 << (q - 1).bit_length()))
+
+
+def serve_block_time(q: int, m: int, n: int, kernel: str, *,
+                     approx: str = None, landmarks: int = 0,
+                     sv_fraction: float = 1.0, mach: Machine = None,
+                     dispatch_s: float = SERVE_DISPATCH_S) -> float:
+    """Modeled wall time of ONE q-query block through the batched
+    predictor: the representation's per-query flops
+    (``modeled_predict_cost``) plus a fixed per-block dispatch cost —
+    the term that makes batching win (F flops amortize, dispatch does
+    not)."""
+    cost = modeled_predict_cost(m, n, max(q, 1), kernel, approx=approx,
+                                landmarks=landmarks,
+                                sv_fraction=sv_fraction, mach=mach)
+    return cost["time"] + dispatch_s
+
+
+def modeled_serve_latency(rate_qps: float, slots: int, m: int, n: int,
+                          kernel: str, *, approx: str = None,
+                          landmarks: int = 0, sv_fraction: float = 1.0,
+                          mach: Machine = None,
+                          dispatch_s: float = SERVE_DISPATCH_S,
+                          ticket_s: float = 0.0,
+                          tail_factor: float = 1.0) -> dict:
+    """Steady-state latency/throughput of the continuous-batching engine
+    at ``rate_qps`` with an admission window of ``slots`` queries/step.
+
+    The steady batch is the fixed point of the drain recurrence
+    ``b_{k+1} = rate * T(b_k)`` with the BUCKETED step time
+    ``T(b) = dispatch + ticket * b + bucket(b) * t_q``: the device pays
+    per padded-bucket row (t_q — the predictor serves the full
+    power-of-two block whether its tail is real or zeros), the host
+    pays per REAL ticket (``ticket_s`` — admission, buffer fill,
+    result scatter; zero by default for the pure device model).  The
+    recurrence is iterated to its limit cycle, since padding makes the
+    device term piecewise-constant and the limit may be a short cycle
+    straddling a bucket edge rather than a fixed point.  The engine
+    saturates when the rate exceeds the full-window capacity; then
+    every step serves a FULL window and the excess is shed by the
+    bounded queue.
+
+    A ticket's latency is the residue of the step it arrived during
+    plus the full step that serves it — uniform in (T, 2T] when T is
+    deterministic, so p50 = 1.5 T and p99 = 1.99 T.  Real hosts jitter:
+    the MEDIAN latency is robust to it, but the p99 inherits the
+    step-time tail, so callers with a measured step-time distribution
+    pass ``tail_factor`` = q99(T)/median(T) (1.0 keeps the
+    deterministic tail).
+
+    Returns p50/p99 latency, sustained throughput, the steady batch and
+    step time (limit-cycle averages), and ``saturated``.
+    """
+    mach = mach or Machine()
+    t_q = serve_block_time(1, m, n, kernel, approx=approx,
+                           landmarks=landmarks, sv_fraction=sv_fraction,
+                           mach=mach, dispatch_s=0.0)
+    t_full = serve_block_time(slots, m, n, kernel, approx=approx,
+                              landmarks=landmarks,
+                              sv_fraction=sv_fraction, mach=mach,
+                              dispatch_s=dispatch_s) + slots * ticket_s
+    capacity = slots / t_full          # qps when every step is full
+    saturated = (rate_qps * (t_q + ticket_s) >= 1.0
+                 or rate_qps >= capacity)
+    if saturated:
+        b_star, t_step, throughput = float(slots), t_full, capacity
+    else:
+        # bucketed drain recurrence (fluid): admit min(queue, slots),
+        # pay the padded bucket (device) plus the real rows (host),
+        # arrivals accumulate meanwhile.  Burn in, then average the
+        # limit cycle.
+        q_len, b_hist, t_hist = 0.0, [], []
+        for k in range(200):
+            b = min(q_len, float(slots))
+            if b < 1.0:                # idle: fast-forward to the next
+                q_len = 1.0            # arrival (the driver does too)
+                continue
+            dt = (dispatch_s + ticket_s * b
+                  + serve_bucket(b, slots) * t_q)
+            q_len = q_len - b + rate_qps * dt
+            if k >= 100:
+                b_hist.append(b)
+                t_hist.append(dt)
+        b_star = sum(b_hist) / len(b_hist)
+        t_step = sum(t_hist) / len(t_hist)
+        throughput = rate_qps
+    return {"p50_s": 1.5 * t_step,
+            "p99_s": 1.99 * t_step * tail_factor,
+            "t_step_s": t_step, "batch": b_star,
+            "throughput_qps": throughput, "capacity_qps": capacity,
+            "saturated": saturated, "slots": slots,
+            "dispatch_s": dispatch_s, "t_query_s": t_q,
+            "ticket_s": ticket_s}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """The engine sizing ``choose_serve_plan`` resolved: admission
+    window (= the slot-matrix height = the largest predictor bucket),
+    the modeled latency summary at the target rate, and the frontier of
+    every candidate considered."""
+
+    slots: int
+    model: dict                    # modeled_serve_latency at the choice
+    frontier: tuple                # ({"slots", "p99_s", ...}, ...)
+
+
+def choose_serve_plan(m: int, n: int, kernel: str, *, rate_qps: float,
+                      slo_p99_s: float = float("inf"),
+                      approx: str = None, landmarks: int = 0,
+                      sv_fraction: float = 1.0, mach: Machine = None,
+                      dispatch_s: float = SERVE_DISPATCH_S,
+                      candidates=(8, 16, 32, 64, 128, 256, 512, 1024,
+                                  2048, 4096)) -> ServePlan:
+    """Size the serving engine from the perf model: the SMALLEST
+    power-of-two admission window that sustains ``rate_qps`` without
+    saturating (bigger windows only stretch the batch window, and with
+    it p99).  Among unsaturated candidates any that meet the p99 SLO
+    are preferred; if none can, the plan falls back to the highest-
+    capacity window (shed-and-degrade beats OOM — the engine's bounded
+    queue enforces it)."""
+    frontier = []
+    for s in candidates:
+        lat = modeled_serve_latency(rate_qps, s, m, n, kernel,
+                                    approx=approx, landmarks=landmarks,
+                                    sv_fraction=sv_fraction, mach=mach,
+                                    dispatch_s=dispatch_s)
+        frontier.append(dict(lat, slots=s))
+    ok = [f for f in frontier if not f["saturated"]
+          and f["p99_s"] <= slo_p99_s]
+    if ok:
+        best = min(ok, key=lambda f: f["slots"])
+    else:
+        unsat = [f for f in frontier if not f["saturated"]]
+        pool = unsat or frontier
+        best = max(pool, key=lambda f: f["capacity_qps"])
+    return ServePlan(slots=best["slots"], model=best,
+                     frontier=tuple(frontier))
+
+
+# --------------------------------------------------------------------------
 # On-chip traffic model (EXPERIMENTS.md §Perf): HBM bytes per outer round.
 # The network Hockney model above prices the collective; these two price
 # the local memory system, where the materialized m x sb slab is the

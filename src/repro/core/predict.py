@@ -23,7 +23,11 @@ hierarchy the solvers train through:
 
 Queries are padded to power-of-two blocks (capped at ``batch``), so the
 jitted per-block function compiles at most log2(batch) shapes and every
-later call — any query count — hits the jit cache.
+later call — any query count, including batches LARGER than the largest
+bucket, which split into full blocks plus a bucketed tail — hits the
+jit cache.  ``w`` may also be F stacked models (m, F): the whole fleet
+(or a multi-model registry group, ``repro.serve``) is then served
+through ONE block call per bucket.
 """
 from __future__ import annotations
 
@@ -45,6 +49,53 @@ def _serve_block(op: GramOperator, sw, Xq):
     return op.serve_block(Xq, sw)
 
 
+def serve_cache_size() -> int:
+    """Number of compiled ``_serve_block`` entries — the recompile
+    observable the serving SLO benchmark and the engine tests assert on
+    (zero growth after warmup = no recompiles at admission)."""
+    return _serve_block._cache_size()
+
+
+def validate_queries(op: GramOperator, X, name: str = "A_test"):
+    """Eager serve-side input validation (mirrors the fit-side
+    ``api._check_finite`` satellite of DESIGN.md §12): reject malformed
+    query blocks at the public boundary with the offending ARGUMENT
+    named, instead of failing inside jit with a shape error attributed
+    to an internal contraction.
+
+    Checks: 2-D shape, feature width against ``op.feature_dim``, and
+    dtype against ``op.dtype`` (serving never silently casts — an f64
+    query stream against an f32 model doubles every block's bandwidth
+    and still returns f32-accurate values).  Array inputs keep their
+    kind (a host numpy block stays on host — the serving engine
+    validates at submit without paying a device round trip per
+    request); anything else is converted via ``jnp.asarray``.
+    """
+    if not (hasattr(X, "ndim") and hasattr(X, "dtype")):
+        X = jnp.asarray(X)
+    if X.ndim != 2:
+        raise ValueError(
+            f"{name} must be 2-D (queries x features), got shape "
+            f"{X.shape}")
+    fd = op.feature_dim
+    if fd is None:
+        raise ValueError(
+            f"{name}: this operator cannot serve new points (low-rank "
+            f"factor without a feature map — build it via "
+            f"repro.core.nystrom.fit_nystrom or the repro.api facade)")
+    if X.shape[1] != fd:
+        raise ValueError(
+            f"{name} has {X.shape[1]} features but the fitted operator "
+            f"expects {fd} — the query block must match the training "
+            f"feature width")
+    if X.dtype != op.dtype:
+        raise ValueError(
+            f"{name} has dtype {X.dtype} but the fitted operator is "
+            f"{op.dtype} — cast the queries explicitly (serving never "
+            f"silently converts)")
+    return X
+
+
 def compact_support(op: GramOperator, w, tol: float = 0.0):
     """Drop zero-weight training rows from the serving representation.
 
@@ -52,11 +103,21 @@ def compact_support(op: GramOperator, w, tol: float = 0.0):
     the support vectors cuts per-query work by the SV fraction for exact
     operators.  Host-side (data-dependent shape): call once at model
     build, not per query.  Returns ``(compacted_op, compacted_w)``.
+
+    ``w`` may be stacked models (m, F): a row survives when ANY member
+    uses it (the compacted operator must serve the whole stack).  With
+    zero support vectors the model is identically zero — one row is
+    kept (operators cannot be empty) with its weight forced to EXACT
+    zero, so the degenerate model still serves exact zeros even when
+    ``tol > 0`` left a sub-threshold residue on the kept row.
     """
     w_host = np.asarray(jax.device_get(w))
-    keep = np.flatnonzero(np.abs(w_host) > tol)
+    mags = (np.abs(w_host) if w_host.ndim == 1
+            else np.max(np.abs(w_host), axis=tuple(range(1, w_host.ndim))))
+    keep = np.flatnonzero(mags > tol)
     if keep.size == 0:                   # degenerate all-zero model:
-        keep = np.array([0])             # serve one row, weight zero
+        keep_j = jnp.asarray([0])        # serve one row, weight zero
+        return op.take(keep_j), jnp.zeros_like(w[keep_j])
     if keep.size == w_host.shape[0]:
         return op, w
     keep_j = jnp.asarray(keep)
@@ -66,10 +127,12 @@ def compact_support(op: GramOperator, w, tol: float = 0.0):
 class BatchedPredictor:
     """``f(Xq) = scale * K(Xq, train) @ w`` served in fixed-size blocks.
 
-    Built once per fitted model (the ``repro.api`` estimators cache one):
-    the representation-side precompute (``op.serve_weights`` — identity
-    for exact, ``Phi^T w`` for low-rank) happens here, and every
-    ``__call__`` only pays the per-block reduction.
+    Built once per fitted model (the ``repro.api`` estimators cache one)
+    or once per registry GROUP (``repro.serve``: w is the (m, F) stacked
+    weights of every model sharing the operator): the representation-side
+    precompute (``op.serve_weights`` — identity for exact, ``Phi^T w``
+    for low-rank) happens here, and every ``__call__`` only pays the
+    per-block reduction.
     """
 
     def __init__(self, op: GramOperator, w, *, batch: int = 1024,
@@ -84,21 +147,48 @@ class BatchedPredictor:
         self.scale = scale
         self.sw = op.serve_weights(w)
 
-    def _block_shape(self, q: int) -> int:
-        """Pad small requests up to a power-of-two bucket (capped at
+    def block_shape(self, q: int) -> int:
+        """The power-of-two bucket a q-query request pads to (capped at
         ``batch``): a stream of varying query counts then compiles at
-        most log2(batch) block shapes instead of one per distinct q."""
+        most log2(batch) block shapes instead of one per distinct q.
+        Public so batch assemblers (``serve.engine``) can build
+        bucket-shaped host buffers directly and skip the device-side
+        pad."""
         if q >= self.batch:
             return self.batch
         return min(self.batch, max(8, 1 << (q - 1).bit_length()))
 
+    def bucket_sizes(self):
+        """Every block shape this predictor can issue — the full jit
+        working set.  ``warmup`` compiles them all up front so steady
+        traffic never recompiles (asserted via ``serve_cache_size``)."""
+        sizes, b = [], 8
+        while b < self.batch:
+            sizes.append(b)
+            b <<= 1
+        sizes.append(self.batch)
+        return sizes
+
+    def warmup(self) -> int:
+        """Pre-compile every bucket (zero-filled blocks); returns the
+        bucket count.  After this, admission-time calls of ANY query
+        count hit the jit cache — the serving engine's no-recompile
+        invariant."""
+        fd = self.op.feature_dim
+        for qb in self.bucket_sizes():
+            jax.block_until_ready(_serve_block(
+                self.op, self.sw, jnp.zeros((qb, fd), self.op.dtype)))
+        return len(self.bucket_sizes())
+
     def __call__(self, A_test: jnp.ndarray) -> jnp.ndarray:
         q = A_test.shape[0]
         if q == 0:                       # drained queue: graceful empty
-            return jnp.zeros((0,), self.sw.dtype)
+            # shape follows the weights: (0,) for one model, (0, F) for
+            # a stacked fleet/registry group
+            return jnp.zeros((0,) + self.sw.shape[1:], self.sw.dtype)
         out, lo = [], 0
         while lo < q:
-            qb = self._block_shape(q - lo)   # tail drops to its own
+            qb = self.block_shape(q - lo)    # tail drops to its own
             Xq = A_test[lo:lo + qb]          # (cached) pow-2 bucket
             if Xq.shape[0] != qb:            # pad to the block shape,
                 pad = qb - Xq.shape[0]       # slice off below

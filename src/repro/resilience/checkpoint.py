@@ -16,6 +16,14 @@ Thin, typed layer over the generic ``train/checkpoint.py`` machinery
     its ``GramOperator`` — exact or Nystrom; operators are registered
     pytrees, so the generic leaf machinery handles them once the
     template supplies the static aux data.
+  * ``operator_meta``/``operator_template`` make that template
+    SELF-DESCRIBING: the static half of an operator (representation
+    kind, kernel config, block size) serializes to a JSON dict, and the
+    dict rebuilds a structurally-identical template on a cold host —
+    no live operator needed to load.  This is what the serving artifact
+    layer (``repro.serve.artifacts``, DESIGN.md §13) persists models
+    through, and ``load_fit`` uses it as the fallback when the caller
+    passes no ``op_template``.
 
 Checkpoints are cut at outer-round boundaries, so a resumed solve
 replays the SAME round decomposition from the snapshot round — the
@@ -35,6 +43,59 @@ from repro.train.checkpoint import (CheckpointManager, available_steps,
                                     load_checkpoint, save_checkpoint)
 
 SOLVE_STATE_KEYS = ("alpha", "f")
+
+
+# ---------------------------------------------------------------------------
+# Operator (de)serialization: the static half as JSON, the array half as
+# ordinary checkpoint leaves.  ``matvec_impl`` (a host callable, pure
+# acceleration — never semantics) is deliberately NOT persisted: a
+# restored operator serves through the portable jnp path, and callers
+# that want the Pallas KMV back re-attach it explicitly.
+# ---------------------------------------------------------------------------
+
+def operator_meta(op) -> dict:
+    """The static (non-leaf) half of a ``GramOperator`` as a JSON-native
+    dict — enough for ``operator_template`` to rebuild a structurally
+    identical pytree template on a host that never saw the original."""
+    import dataclasses as _dc
+
+    from repro.core.kernels import ExactGramOperator, LowRankGramOperator
+
+    if isinstance(op, ExactGramOperator):
+        return {"kind": "exact", "kernel": _dc.asdict(op.cfg),
+                "block": int(op.block)}
+    if isinstance(op, LowRankGramOperator):
+        meta = {"kind": "lowrank", "has_fmap": op.fmap is not None}
+        if op.fmap is not None:
+            meta["kernel"] = _dc.asdict(op.fmap.kernel)
+        return meta
+    raise TypeError(
+        f"cannot serialize operator of type {type(op).__name__}: only "
+        f"the Exact/LowRank serving representations persist (sharded "
+        f"operators are rebuilt per rank from their shards)")
+
+
+def operator_template(meta: dict):
+    """Inverse of ``operator_meta``: a template operator whose treedef +
+    static aux match the saved one (leaf slots hold the placeholder 0 —
+    the checkpoint loader only reads the STRUCTURE)."""
+    from repro.core.kernels import (ExactGramOperator, KernelConfig,
+                                    LowRankGramOperator)
+    from repro.core.nystrom import NystromMap
+
+    kind = meta.get("kind")
+    if kind == "exact":
+        return ExactGramOperator(A=0, cfg=KernelConfig(**meta["kernel"]),
+                                 matvec_impl=None,
+                                 block=int(meta.get("block", 2048)))
+    if kind == "lowrank":
+        fmap = None
+        if meta.get("has_fmap"):
+            fmap = NystromMap(landmarks=0, transform=0,
+                              kernel=KernelConfig(**meta["kernel"]))
+        return LowRankGramOperator(Phi=0, fmap=fmap)
+    raise ValueError(f"unknown operator kind {kind!r} in checkpoint "
+                     f"meta — cannot rebuild a template")
 
 
 def solve_fingerprint(problem: str, m: int, dtype, cfg, opts) -> dict:
@@ -132,6 +193,8 @@ def save_fit(directory: str, result, op=None, step: int = 0) -> str:
         "has_history": result.history is not None,
         "has_op": op is not None,
     }
+    if op is not None:
+        meta["op_meta"] = operator_meta(op)
     return save_checkpoint(directory, step, tree, extra={"fit": meta})
 
 
@@ -141,7 +204,10 @@ def load_fit(directory: str, op_template: Any = None, step: int = 0):
     ``op_template`` must be an operator with the same STRUCTURE as the
     saved one (pytree aux data — configs, static ints — lives in the
     treedef, not on disk); pass the live operator or a zeros-like
-    clone.  ``op`` is None when the fit was saved without one."""
+    clone — or pass None and the template is rebuilt from the saved
+    ``operator_meta`` (checkpoints written before the meta existed
+    still require an explicit template).  ``op`` is None when the fit
+    was saved without one."""
     from repro.api import FitResult, SolverOptions
 
     steps = available_steps(directory)
@@ -157,8 +223,11 @@ def load_fit(directory: str, op_template: Any = None, step: int = 0):
         arrays["history"] = 0
     template = {"arrays": arrays}
     if fit["has_op"]:
+        if op_template is None and "op_meta" in fit:
+            op_template = operator_template(fit["op_meta"])
         if op_template is None:
-            raise ValueError("checkpoint contains an operator; pass "
+            raise ValueError("checkpoint contains an operator but no "
+                             "op_meta (pre-serve format); pass "
                              "op_template= with the matching structure")
         template["op"] = op_template
     tree, _ = load_checkpoint(directory, step=step, template=template)

@@ -1,0 +1,204 @@
+"""Model artifacts: persist a fitted estimator, restore it cold
+(DESIGN.md §13, layer 1 of ``repro.serve``).
+
+A *servable model* is everything the prediction path needs and nothing
+the solve needed: the serving ``GramOperator`` (exact features + kernel
+config, or the Nystrom factor + feature map), the dual weights, the
+problem config (C/lam/loss), the RESOLVED ``SolverOptions`` the fit ran
+with, and — so a deployed model can absorb fresh labeled traffic via
+``ModelRegistry.refit`` — the raw training data and targets.
+
+On-disk format reuses the checkpoint machinery end to end
+(``train/checkpoint.py`` atomic step directories; one .npy per pytree
+leaf; ``resilience/checkpoint.operator_meta`` for the operator's static
+half), under a VERSIONED manifest:
+
+    <dir>/step_00000000/
+        meta.json      {"serve_manifest": {"version": 1, "problem": ...,
+                        "cfg": ..., "options": ..., "op_meta": ...,
+                        "fingerprint": ...}}
+        leaf_*.npy     alpha, y, op leaves, [A_raw for low-rank]
+
+``load_model`` refuses manifests from a NEWER format version (forward
+compatibility is a lie; failing loudly beats serving garbage) and
+verifies the fit fingerprint round-trips, so a registry can dedup
+device state across models restored on different days (content hashes
+match when the training set matches — see ``registry.operator_key``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core.dcd import SVMConfig
+from repro.core.bdcd import KRRConfig
+from repro.core.kernels import ExactGramOperator, KernelConfig
+from repro.resilience.checkpoint import operator_meta, operator_template
+from repro.train.checkpoint import (available_steps, load_checkpoint,
+                                    save_checkpoint)
+
+MANIFEST_VERSION = 1
+PROBLEMS = ("ksvm", "krr")
+
+
+# repro: noqa[CHK-PYTREE] host-side model record — the registry/engine
+#   feed its op/weights INTO jitted block calls as separate pytree args;
+#   the record itself never crosses a jit boundary.
+@dataclasses.dataclass
+class ServableModel:
+    """A fitted estimator reduced to its serving + refit essentials.
+
+    ``problem`` is "ksvm" or "krr"; ``alpha`` the raw dual solution;
+    ``y`` the training targets/labels (refit needs them; K-SVM serving
+    folds them into the weights); ``op`` the UNSCALED serving operator
+    the facade kept on ``op_``; ``A_raw`` the raw training features —
+    identical to ``op.A`` for exact representations (not duplicated in
+    storage), carried separately for low-rank ones (refit has to rebuild
+    the feature map over the grown training set).
+    """
+
+    problem: str
+    cfg: Union[SVMConfig, KRRConfig]
+    options: object                      # resolved SolverOptions
+    alpha: jnp.ndarray
+    y: jnp.ndarray
+    op: object                           # GramOperator
+    A_raw: Optional[jnp.ndarray] = None
+    fingerprint: Optional[dict] = None
+
+    def __post_init__(self):
+        if self.problem not in PROBLEMS:
+            raise ValueError(f"problem must be one of {PROBLEMS}, got "
+                             f"{self.problem!r}")
+
+    # -- serving surface ------------------------------------------------
+
+    @property
+    def serve_w(self) -> jnp.ndarray:
+        """The weight vector ``K(Xq, train) @ w`` serves, with every
+        per-model scalar FOLDED IN (serving is linear in w): K-SVM
+        decision values use ``alpha * y``; K-RR predictions ``alpha /
+        lam``.  Registry groups stack these columns directly — one
+        block call serves every model in the group with no per-model
+        epilogue."""
+        if self.problem == "ksvm":
+            return self.alpha * self.y
+        return self.alpha / self.cfg.lam
+
+    @property
+    def features(self) -> jnp.ndarray:
+        """Raw training features (refit's base): ``op.A`` for exact
+        operators, the separately-carried ``A_raw`` for low-rank."""
+        if isinstance(self.op, ExactGramOperator):
+            return self.op.A
+        if self.A_raw is None:
+            raise ValueError(
+                "low-rank model carries no raw training features "
+                "(A_raw=None) — it can serve but not refit")
+        return self.A_raw
+
+    @classmethod
+    def from_estimator(cls, est) -> "ServableModel":
+        """Capture a fitted ``repro.api`` estimator (``KernelSVM`` /
+        ``KernelRidge``)."""
+        from repro.api import KernelRidge, KernelSVM
+        from repro.resilience.checkpoint import solve_fingerprint
+
+        if isinstance(est, KernelSVM):
+            problem = "ksvm"
+        elif isinstance(est, KernelRidge):
+            problem = "krr"
+        else:
+            raise TypeError(f"expected a fitted KernelSVM/KernelRidge, "
+                            f"got {type(est).__name__}")
+        if not hasattr(est, "op_"):
+            raise ValueError("estimator is not fitted (no op_) — call "
+                             "fit() before registering/saving")
+        y = est.y_
+        opts = est.result_.options
+        A_raw = est.A_ if not isinstance(est.op_, ExactGramOperator) \
+            else None
+        fp = solve_fingerprint(problem, est.A_.shape[0], est.A_.dtype,
+                               est.cfg, opts)
+        return cls(problem=problem, cfg=est.cfg, options=opts,
+                   alpha=est.alpha_, y=y, op=est.op_, A_raw=A_raw,
+                   fingerprint=fp)
+
+
+def save_model(directory: str, model, *, step: int = 0) -> str:
+    """Persist a ``ServableModel`` (or a fitted estimator, captured via
+    ``ServableModel.from_estimator``) under a versioned manifest.
+    Returns the checkpoint path."""
+    from repro.api import KernelRidge, KernelSVM
+
+    if isinstance(model, (KernelSVM, KernelRidge)):
+        model = ServableModel.from_estimator(model)
+    tree = {"alpha": model.alpha, "y": model.y, "op": model.op}
+    if model.A_raw is not None:
+        tree["A_raw"] = model.A_raw
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "problem": model.problem,
+        "cfg": _cfg_meta(model.cfg),
+        "options": {**dataclasses.asdict(model.options), "mesh": None},
+        "op_meta": operator_meta(model.op),
+        "has_A_raw": model.A_raw is not None,
+        "fingerprint": model.fingerprint,
+    }
+    return save_checkpoint(directory, step, tree,
+                           extra={"serve_manifest": manifest})
+
+
+def load_model(directory: str, *, step: Optional[int] = None
+               ) -> ServableModel:
+    """Restore a ``ServableModel`` from ``save_model`` output.  The
+    operator template is rebuilt from the manifest's ``op_meta`` — no
+    live object needed; a manifest written by a NEWER format version is
+    refused with the versions named."""
+    from repro.api import SolverOptions
+
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no model artifact in {directory!r}")
+    step = steps[-1] if step is None else step
+    _, meta = load_checkpoint(directory, step=step)
+    manifest = meta["extra"].get("serve_manifest")
+    if manifest is None:
+        raise ValueError(
+            f"{directory!r} holds a checkpoint but not a serve model "
+            f"artifact (no serve_manifest) — was it written by "
+            f"save_fit/save_solve_state instead of save_model?")
+    if manifest["version"] > MANIFEST_VERSION:
+        raise ValueError(
+            f"model artifact {directory!r} has manifest version "
+            f"{manifest['version']} but this build reads <= "
+            f"{MANIFEST_VERSION} — upgrade repro before serving it")
+    template = {"alpha": 0, "y": 0,
+                "op": operator_template(manifest["op_meta"])}
+    if manifest["has_A_raw"]:
+        template["A_raw"] = 0
+    tree, _ = load_checkpoint(directory, step=step, template=template)
+    return ServableModel(
+        problem=manifest["problem"],
+        cfg=_cfg_from_meta(manifest["problem"], manifest["cfg"]),
+        options=SolverOptions(**manifest["options"]),
+        alpha=jnp.asarray(tree["alpha"]),
+        y=jnp.asarray(tree["y"]),
+        op=tree["op"],
+        A_raw=(jnp.asarray(tree["A_raw"]) if manifest["has_A_raw"]
+               else None),
+        fingerprint=manifest["fingerprint"])
+
+
+def _cfg_meta(cfg) -> dict:
+    meta = dataclasses.asdict(cfg)           # kernel nests as a dict
+    return meta
+
+
+def _cfg_from_meta(problem: str, meta: dict):
+    kernel = KernelConfig(**meta.pop("kernel"))
+    if problem == "ksvm":
+        return SVMConfig(kernel=kernel, **meta)
+    return KRRConfig(kernel=kernel, **meta)

@@ -1,0 +1,260 @@
+"""Continuous-batching serving engine (DESIGN.md §13, layer 3 of
+``repro.serve``).
+
+Query traffic does not arrive in tidy power-of-two blocks: requests for
+different models trickle in one at a time, some with latency deadlines,
+sometimes faster than the device can serve.  This engine turns that
+stream into the fixed-shape work the jit cache already holds — the
+serving twin of the training fleet's slot-matrix scheduler
+(``train/serving.py``: admit into fixed slots, step, retire):
+
+  * ``submit`` validates EAGERLY (feature width, dtype, 1-D/2-D shape —
+    the offending argument named; a malformed request never reaches a
+    batch another request is riding in), then enqueues a ``Ticket``.
+    The queue is BOUNDED: beyond ``max_queue`` waiting tickets new
+    arrivals are SHED at submit time — the caller learns immediately
+    (ticket.status == "shed") instead of waiting on a queue that cannot
+    drain; accepted traffic keeps its latency.
+  * ``step`` is one drain cycle: expired tickets retire first (deadline
+    passed while queued — serving them would waste a slot on an answer
+    nobody is waiting for), then each registry group admits up to
+    ``slots`` queued rows, concatenates them into ONE query block, and
+    serves every member model's column in a single
+    ``BatchedPredictor`` call — the block pads to the pre-warmed
+    power-of-two buckets, so admission NEVER compiles (asserted via
+    ``serve_cache_size`` growth == 0 after ``warmup``).
+  * mixed-model traffic batches per GROUP, not per model: requests for
+    F models sharing one operator ride the same block, each ticket
+    slicing its model's column out of the (q, F) result.
+
+Time is injected (``clock=``): production uses ``time.monotonic``; the
+SLO benchmark (fig9) drives a virtual clock advanced by measured step
+durations, so modeled-vs-measured latency comparisons do not inherit
+host scheduling jitter.  Registry mutations (refit's atomic swap)
+are picked up at step boundaries via the generation counter —
+in-flight blocks finish on the weights they were formed with.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predict import validate_queries
+from .registry import ModelRegistry
+
+PENDING = "pending"
+DONE = "done"
+EXPIRED = "expired"
+SHED = "shed"
+
+
+# repro: noqa[CHK-PYTREE] host-side request record — the engine gathers
+#   ticket rows into plain query blocks before any jit boundary; the
+#   ticket itself never crosses one.
+@dataclasses.dataclass
+class Ticket:
+    """One submitted request: ``rows`` queries against one model.
+
+    ``X`` is kept as a HOST array: the engine assembles each group's
+    batch in a host buffer sized to the jit bucket and ships ONE
+    transfer per block — per-ticket device concatenation would compile
+    a fresh XLA concat for every distinct ticket count.
+
+    ``status`` walks pending -> done (``result`` holds the (rows,)
+    values) | expired (deadline passed while queued) | shed (bounded
+    queue was full at submit).  Times are in the engine clock's units.
+    """
+
+    id: int
+    name: str
+    X: np.ndarray                       # (rows, n) query block, host
+    t_submit: float
+    deadline: Optional[float] = None    # absolute clock time, or None
+    status: str = PENDING
+    result: Optional[jnp.ndarray] = None
+    t_done: Optional[float] = None
+
+    @property
+    def rows(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-done latency (None until served)."""
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+
+class ServingEngine:
+    """Bounded-queue continuous batcher over a ``ModelRegistry``.
+
+    ``slots`` is the per-group admission width of one step — at most
+    that many queued rows form each group's block, so it must not
+    exceed the registry's ``predict_batch`` (the largest warmed
+    bucket); the constructor clamps and the invariant holds by
+    construction.  ``max_queue`` bounds WAITING tickets across all
+    models; ``clock`` supplies time (injectable for virtual-time
+    benchmarking).
+    """
+
+    def __init__(self, registry: ModelRegistry, *, slots: int = 256,
+                 max_queue: int = 1024,
+                 clock: Callable[[], float] = time.monotonic):
+        if not isinstance(slots, int) or slots < 1:
+            raise ValueError(f"slots must be a positive int, got {slots!r}")
+        if not isinstance(max_queue, int) or max_queue < 1:
+            raise ValueError(
+                f"max_queue must be a positive int, got {max_queue!r}")
+        self.registry = registry
+        self.slots = min(slots, registry.predict_batch)
+        self.max_queue = max_queue
+        self.clock = clock
+        self._queue: List[Ticket] = []
+        self._next_id = 0
+        self._generation = registry.generation
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "served": 0, "shed": 0, "expired": 0,
+            "steps": 0, "blocks": 0}
+        self._latencies: List[float] = []
+
+    # -- admission ------------------------------------------------------
+
+    def submit(self, name: str, X, *,
+               deadline_s: Optional[float] = None) -> Ticket:
+        """Enqueue queries for ``name``.  ``X`` is one query row (n,) or
+        a block (rows, n); validation is EAGER — feature-dim/dtype
+        mismatches raise ``ValueError`` naming ``X`` here, at the public
+        boundary, never inside a mixed batch.  Returns the ticket
+        (status "shed" when the bounded queue was full)."""
+        model = self.registry._model(name)   # KeyError on unknown name
+        # host copy FIRST: validation then runs entirely on host (no
+        # per-submit device round trip churning the dispatch queue)
+        X = np.asarray(X)
+        if X.ndim == 1:
+            X = X[None, :]
+        X = validate_queries(model.op, X, name="X")
+        now = self.clock()
+        ticket = Ticket(id=self._next_id, name=name, X=X, t_submit=now,
+                        deadline=(None if deadline_s is None
+                                  else now + deadline_s))
+        self._next_id += 1
+        self.stats["submitted"] += 1
+        if len(self._queue) >= self.max_queue:
+            ticket.status = SHED
+            self.stats["shed"] += 1
+            return ticket
+        self._queue.append(ticket)
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def warmup(self) -> int:
+        """Pre-compile every group's bucket set (delegates to the
+        registry).  After this, ``step`` never compiles — the
+        no-recompile invariant ``serve_cache_size`` asserts."""
+        return self.registry.warmup()
+
+    # -- drain ----------------------------------------------------------
+
+    def step(self) -> int:
+        """One drain cycle; returns the number of rows served.
+
+        Retire-expired -> admit-per-group -> serve-one-block-per-group
+        -> scatter results.  Registry generation is sampled ONCE at the
+        top: a refit swap that lands mid-step is picked up next step
+        (tickets already admitted finish on the group snapshot they
+        were batched against — never a mix)."""
+        self.stats["steps"] += 1
+        if self._generation != self.registry.generation:
+            self._generation = self.registry.generation
+        now = self.clock()
+        survivors: List[Ticket] = []
+        for t in self._queue:
+            if t.deadline is not None and now > t.deadline:
+                t.status = EXPIRED
+                self.stats["expired"] += 1
+            else:
+                survivors.append(t)
+        self._queue = survivors
+
+        # admit: FIFO per group, up to ``slots`` rows each
+        by_group: Dict[int, List[Ticket]] = {}
+        admitted_rows: Dict[int, int] = {}
+        admitted: List[Ticket] = []
+        for t in self._queue:
+            group = self.registry.group(t.name)
+            gid = id(group)
+            used = admitted_rows.get(gid, 0)
+            if used + t.rows > self.slots:
+                continue                 # next step; FIFO within group
+            by_group.setdefault(gid, []).append(t)
+            admitted_rows[gid] = used + t.rows
+            admitted.append(t)
+        if not admitted:
+            return 0
+        admitted_ids = {t.id for t in admitted}
+        self._queue = [t for t in self._queue if t.id not in admitted_ids]
+
+        served = 0
+        for gid, tickets in by_group.items():
+            group = self.registry.group(tickets[0].name)
+            # host-side batch assembly, ALREADY padded to the jit
+            # bucket: one zeros buffer, one H2D transfer, one block
+            # call — no device-side concat/pad, so no hidden per-size
+            # compiles beyond the warmed bucket set
+            q = sum(t.rows for t in tickets)
+            qb = group.predictor.block_shape(q)
+            buf = np.zeros((qb, group.op.feature_dim),
+                           dtype=np.dtype(group.op.dtype))
+            lo = 0
+            for t in tickets:
+                buf[lo:lo + t.rows] = t.X
+                lo += t.rows
+            out = group.serve(jnp.asarray(buf))  # (qb, F): every model
+            # ONE transfer back, then host-view scatter: per-ticket jnp
+            # slicing would pay a device dispatch per ticket
+            out_host = np.asarray(jax.device_get(out))[:q]
+            t_done = self.clock()
+            lo = 0
+            for t in tickets:
+                col = group.col[t.name]
+                t.result = out_host[lo:lo + t.rows, col]
+                lo += t.rows
+                t.status = DONE
+                t.t_done = t_done
+                self._latencies.append(t.latency)
+                served += t.rows
+            self.stats["served"] += len(tickets)
+            self.stats["blocks"] += 1
+        return served
+
+    def run_until_idle(self, *, max_steps: int = 10_000) -> int:
+        """Drain the queue completely; returns total rows served."""
+        total = 0
+        for _ in range(max_steps):
+            if not self._queue:
+                return total
+            total += self.step()
+        raise RuntimeError(
+            f"queue failed to drain within {max_steps} steps "
+            f"({len(self._queue)} tickets still pending)")
+
+    # -- observability --------------------------------------------------
+
+    def latency_quantiles(self, qs=(0.5, 0.99)) -> Dict[str, float]:
+        """Observed submit-to-done latency quantiles (engine clock
+        units) over every served ticket — the measured side of the
+        fig9 modeled-vs-measured comparison."""
+        if not self._latencies:
+            return {f"p{int(q * 100)}": float("nan") for q in qs}
+        lat = np.asarray(self._latencies, np.float64)
+        return {f"p{int(q * 100)}": float(np.quantile(lat, q))
+                for q in qs}

@@ -1,0 +1,253 @@
+"""Multi-model registry with shared device-resident state (DESIGN.md
+§13, layer 2 of ``repro.serve``).
+
+Production kernel-method deployments serve MANY models against the same
+data: a regularization grid's survivors, per-segment classifiers on one
+embedding table, an A/B pair.  Loading each model's operator separately
+duplicates the dominant memory — the (m, n) training features (exact)
+or the (m, l) factor (Nystrom) — once per model.  This registry applies
+the fleet trick (DESIGN.md §10) at serving time:
+
+  * models whose operators carry the SAME data (content-hashed:
+    ``operator_key``) join one *group* holding a single device-resident
+    ``GramOperator``;
+  * a group's weights stack into ONE (m, F) matrix (each column a
+    model's ``serve_w`` — per-model scalars like 1/lam folded in, since
+    serving is linear in w), served through one
+    ``serve_weights``/``serve_block`` call per query block — F models
+    for one KMV sweep;
+  * ``refit(name, X_new, y_new)`` absorbs fresh labeled traffic through
+    the facade's existing ``warm_start=`` path (old alpha zero-padded
+    over the new rows; one representation build) and ATOMICALLY swaps
+    the new model in: group state is rebuilt fully before the name is
+    repointed, and a generation counter tells long-lived engines to
+    refresh their snapshots — in-flight batches finish on the old
+    weights, the next batch sees the new ones, nothing ever sees a mix.
+
+The registry is the model-management layer only; request batching,
+deadlines and load shedding live in ``serve.engine.ServingEngine``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predict import BatchedPredictor, validate_queries
+from .artifacts import ServableModel, load_model, save_model
+
+
+def operator_key(op) -> str:
+    """Content identity of an operator's device state: sha1 over the
+    data leaves' bytes plus the static treedef repr.  Two models fitted
+    (or restored from artifacts written months apart) against one X and
+    one kernel config hash identically — the dedup key that lets the
+    registry keep ONE device-resident copy.  Host transfer happens once
+    per registration, never on the serving path."""
+    leaves, treedef = jax.tree_util.tree_flatten(op)
+    h = hashlib.sha1(repr(treedef).encode())
+    for leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+class ServeGroup:
+    """One shared operator + the stacked weights of every member model.
+
+    ``W`` is (m, F) with ``col[name]`` naming each model's column; the
+    ``BatchedPredictor`` over (op, W) precomputes ``serve_weights`` once
+    for the whole group and answers any query block with (q, F) values
+    in one reduction.  Groups are rebuilt WHOLE on membership change
+    (registration order preserved) — cheap host work, and the old
+    predictor stays valid for any batch already formed."""
+
+    def __init__(self, op, *, predict_batch: int = 1024):
+        self.op = op
+        self.names: List[str] = []
+        self.col: Dict[str, int] = {}
+        self.W: Optional[jnp.ndarray] = None
+        self.predictor: Optional[BatchedPredictor] = None
+        self.predict_batch = predict_batch
+
+    @property
+    def size(self) -> int:
+        return len(self.names)
+
+    def rebuild(self, models: Dict[str, ServableModel]) -> None:
+        self.col = {n: j for j, n in enumerate(self.names)}
+        self.W = jnp.stack([models[n].serve_w for n in self.names],
+                           axis=1)
+        self.predictor = BatchedPredictor(self.op, self.W,
+                                          batch=self.predict_batch)
+
+    def serve(self, Xq) -> jnp.ndarray:
+        """(q, F) decision values/predictions for every member."""
+        return self.predictor(Xq)
+
+    def warmup(self) -> int:
+        return self.predictor.warmup()
+
+
+class ModelRegistry:
+    """Layer-2 of ``repro.serve``: named models, deduped device state.
+
+    ``register`` accepts a fitted estimator or a ``ServableModel``;
+    ``load``/``save`` go through the artifact layer; ``predict`` serves
+    one model's queries through its group's stacked predictor (the same
+    path the engine batches into); ``refit`` grows a model's training
+    set in place.  ``generation`` increments on every mutation that
+    changes what serving would return — engines snapshot group state
+    and refresh when it moves.
+    """
+
+    def __init__(self, *, predict_batch: int = 1024):
+        self.models: Dict[str, ServableModel] = {}
+        self._groups: Dict[str, ServeGroup] = {}
+        self._group_of: Dict[str, str] = {}
+        self.predict_batch = predict_batch
+        self.generation = 0
+
+    # -- membership -----------------------------------------------------
+
+    def register(self, name: str, model) -> ServableModel:
+        """Add (or replace) a named model, joining the group holding its
+        operator's data if one exists."""
+        from repro.api import KernelRidge, KernelSVM
+
+        if isinstance(model, (KernelSVM, KernelRidge)):
+            model = ServableModel.from_estimator(model)
+        if not isinstance(model, ServableModel):
+            raise TypeError(f"register expects a fitted estimator or a "
+                            f"ServableModel, got {type(model).__name__}")
+        if name in self.models:
+            self.unregister(name)
+        key = operator_key(model.op)
+        group = self._groups.get(key)
+        if group is None:
+            group = ServeGroup(model.op,
+                               predict_batch=self.predict_batch)
+            self._groups[key] = group
+        else:
+            # share the group's device-resident operator: the new
+            # model's (identical-content) copy is dropped on the floor
+            model = dataclasses.replace(model, op=group.op)
+        self.models[name] = model
+        group.names.append(name)
+        self._group_of[name] = key
+        group.rebuild(self.models)
+        self.generation += 1
+        return model
+
+    def unregister(self, name: str) -> None:
+        key = self._group_of.pop(name)
+        group = self._groups[key]
+        group.names.remove(name)
+        del self.models[name]
+        if group.names:
+            group.rebuild(self.models)
+        else:
+            del self._groups[key]
+        self.generation += 1
+
+    def save(self, name: str, directory: str) -> str:
+        return save_model(directory, self._model(name))
+
+    def load(self, name: str, directory: str) -> ServableModel:
+        return self.register(name, load_model(directory))
+
+    # -- introspection --------------------------------------------------
+
+    def _model(self, name: str) -> ServableModel:
+        if name not in self.models:
+            raise KeyError(f"no model {name!r} registered (have "
+                           f"{sorted(self.models)})")
+        return self.models[name]
+
+    def group(self, name: str) -> ServeGroup:
+        return self._groups[self._group_of[self._check_name(name)]]
+
+    def _check_name(self, name: str) -> str:
+        self._model(name)
+        return name
+
+    @property
+    def n_groups(self) -> int:
+        return len(self._groups)
+
+    def groups(self) -> List[ServeGroup]:
+        return list(self._groups.values())
+
+    def warmup(self) -> int:
+        """Pre-compile every group's predictor buckets; returns total
+        bucket count.  After this, steady traffic through ``predict`` /
+        the engine never recompiles."""
+        return sum(g.warmup() for g in self._groups.values())
+
+    # -- serving --------------------------------------------------------
+
+    def predict(self, name: str, Xq) -> jnp.ndarray:
+        """One model's values for a query block — served through the
+        GROUP predictor (all F columns computed, one selected), so this
+        path and the engine's batched path execute the identical
+        compiled computation."""
+        model = self._model(name)
+        Xq = validate_queries(model.op, Xq, name="Xq")
+        group = self.group(name)
+        out = group.serve(Xq)
+        return out[:, group.col[name]]
+
+    # -- online refit ---------------------------------------------------
+
+    def refit(self, name: str, X_new, y_new, *, options=None):
+        """Absorb fresh labeled traffic into a deployed model: fit on
+        ``concat(X_old, X_new)`` warm-started from the current alpha
+        (zero-padded over the new rows — the facade's existing
+        ``warm_start=`` path, one representation build), then atomically
+        swap the served weights.  Returns the new fit's ``FitResult``.
+
+        The refitted model's operator covers a DIFFERENT training set,
+        so it leaves its old group (siblings keep the old shared
+        operator) and joins/forms the group matching the grown data.
+        Convergence: run with a tolerance (``options`` overrides the
+        stored ones) and the warm start is equivalent to a cold fit on
+        the combined data within the stopping tolerance — asserted by
+        the serve test suite and the fig9 gate.
+        """
+        from repro.api import KernelRidge, KernelSVM
+
+        model = self._model(name)
+        X_new = jnp.asarray(X_new)
+        y_new = jnp.asarray(y_new)
+        validate_queries(model.op, X_new, name="X_new")
+        if y_new.shape[0] != X_new.shape[0]:
+            raise ValueError(
+                f"y_new has {y_new.shape[0]} rows but X_new has "
+                f"{X_new.shape[0]} — refit needs one label per row")
+        A_old = model.features
+        A = jnp.concatenate([A_old, X_new], axis=0)
+        y = jnp.concatenate([model.y, y_new], axis=0)
+        a0 = jnp.concatenate(
+            [model.alpha, jnp.zeros(X_new.shape[0], model.alpha.dtype)])
+        opts = options if options is not None else model.options
+        if model.problem == "ksvm":
+            est = KernelSVM(C=model.cfg.C, loss=model.cfg.loss,
+                            kernel=model.cfg.kernel, options=opts,
+                            predict_batch=self.predict_batch)
+        else:
+            est = KernelRidge(lam=model.cfg.lam, kernel=model.cfg.kernel,
+                              options=opts,
+                              predict_batch=self.predict_batch)
+        result = est.fit(A, y, warm_start=a0)
+        # atomic swap: the new group state is fully built by register()
+        # before the name points at it; generation bumps exactly once
+        # per visible change, so an engine refreshes at a step boundary
+        # and never serves a half-updated group
+        self.register(name, est)
+        return result

@@ -183,7 +183,7 @@ class TestBatchedPredict:
         op = ExactGramOperator(A, KERN)
         w = jax.random.normal(jax.random.key(9), (A.shape[0],))
         pred = BatchedPredictor(op, w, batch=64)
-        blocks = {pred._block_shape(q) for q in range(1, 97)}
+        blocks = {pred.block_shape(q) for q in range(1, 97)}
         assert blocks <= {8, 16, 32, 64}
         # ragged tail reuses a smaller bucket, values unchanged
         np.testing.assert_allclose(
