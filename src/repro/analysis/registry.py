@@ -42,12 +42,23 @@ KERNELS_DIR = os.path.join(os.path.dirname(os.path.dirname(
 @dataclasses.dataclass
 class SpecInfo:
     """One BlockSpec, concretized: ``block_shape`` (ints), ``index_map``
-    (the live lambda), and the shape/dtype of the array it blocks."""
+    (the live lambda), the shape/dtype of the array it blocks, and the
+    declared ``memory_space`` (None = default pipelined VMEM)."""
 
     block_shape: Tuple[int, ...]
     index_map: Optional[Callable]
     array_shape: Tuple[int, ...]
     dtype: object
+    memory_space: object = None
+
+    @property
+    def is_any_space(self) -> bool:
+        """True for ``TPUMemorySpace.ANY`` specs: the array stays in
+        HBM/host and the BlockSpec pipeline never stages it through
+        VMEM (the kernel DMAs slices itself) — such inputs must not be
+        priced against the VMEM block budget."""
+        ms = self.memory_space
+        return ms is not None and "any" in str(ms).lower()
 
 
 @dataclasses.dataclass
@@ -69,10 +80,14 @@ class CapturedCall:
         return (self.path, self.line)
 
     def block_bytes(self) -> int:
-        """Per-grid-step VMEM block bytes (in + out blocks)."""
+        """Per-grid-step VMEM block bytes (in + out blocks).  ANY-space
+        specs are excluded: those arrays never transit the BlockSpec
+        pipeline (the kernel's own scratch + DMA slots, counted in
+        ``scratch_bytes``, are their VMEM footprint)."""
         return sum(
             math.prod(s.block_shape) * jnp.dtype(s.dtype).itemsize
-            for s in self.in_specs + self.out_specs)
+            for s in self.in_specs + self.out_specs
+            if not s.is_any_space)
 
 
 def _as_list(x) -> list:
@@ -90,7 +105,8 @@ def _spec_infos(specs, arrays) -> List[SpecInfo]:
         block = getattr(spec, "block_shape", None)
         block = tuple(block) if block is not None else shape
         out.append(SpecInfo(block, getattr(spec, "index_map", None),
-                            shape, dtype))
+                            shape, dtype,
+                            getattr(spec, "memory_space", None)))
     return out
 
 
@@ -182,6 +198,18 @@ def _run_kmv(kernel_name, vec):
     return go
 
 
+def _run_kmv_stream(kernel_name, c):
+    def go():
+        from repro.core.kernels import KernelConfig
+        from repro.kernels import kmv_stream
+        Xc = jnp.zeros((4, 24, 70), jnp.float32)    # ragged: 24 % 8,
+        B = jnp.zeros((12, 70), jnp.float32)        # 70 % 128, 12 % 8
+        Xvc = jnp.zeros((4, 24, c), jnp.float32)
+        _unwrap(kmv_stream.kmv_stream_pallas)(
+            Xc, B, Xvc, KernelConfig(name=kernel_name))
+    return go
+
+
 def _run_flash():
     from repro.kernels import flash_attention as fa
     BH, S, hd = 2, 512, 128
@@ -201,6 +229,9 @@ ENTRY_POINTS: Tuple[EntryPoint, ...] = (
     EntryPoint("gram_pallas[bf16,rbf]", _run_gram(jnp.bfloat16)),
     EntryPoint("kmv_pallas[rbf,mat]", _run_kmv("rbf", vec=False)),
     EntryPoint("kmv_pallas[linear,vec]", _run_kmv("linear", vec=True)),
+    EntryPoint("kmv_stream_pallas[rbf]", _run_kmv_stream("rbf", c=5)),
+    EntryPoint("kmv_stream_pallas[linear]",
+               _run_kmv_stream("linear", c=1)),
     EntryPoint("flash_attention[fwd+bwd]", _run_flash),
     EntryPoint("rmsnorm_pallas", _run_rmsnorm),
 )

@@ -68,7 +68,7 @@ import numpy as np
 from repro.compat import enable_x64, make_mesh_auto
 from repro.core import (DIVERGED_NONFINITE, GuardSpec, KernelConfig,
                         KRRConfig, SVMConfig, NO_TOL,
-                        ExactGramOperator,
+                        ExactGramOperator, StreamingGramOperator,
                         bdcd_krr, block_schedule, coordinate_schedule,
                         dcd_ksvm, gram_slab, krr_rel_residual,
                         ksvm_duality_gap, ksvm_duality_gap_lowrank,
@@ -165,6 +165,18 @@ class SolverOptions:
     fallback:    walk the escalation ladder on divergence (default); if
                  False a divergence raises ``DivergenceError``
                  immediately, surfacing the structured events instead.
+    stream:      out-of-core representation (DESIGN.md §14): a positive
+                 int streams the data through the double-buffered KMV
+                 pipeline in row chunks of that size (the
+                 ``StreamingGramOperator`` — no reduction ever holds X
+                 or an m-tall slab in its working set); ``"auto"`` (or
+                 True) lets the autotuner resolve the chunk size from
+                 the streaming pipeline cost model
+                 (``perf_model.choose_chunk_rows``); None/False (the
+                 default) keeps the resident operator.  Exact
+                 representation and serial layout only (the distributed
+                 layouts shard instead of stream; low-rank factors are
+                 already O(m*l)-small).
     """
 
     method: str = "sstep"
@@ -187,8 +199,34 @@ class SolverOptions:
     checkpoint_every: int = 0
     checkpoint_dir: Optional[str] = None
     fallback: bool = True
+    stream: Union[None, bool, int, str] = None
 
     def __post_init__(self):
+        # normalize the stream knob first (True == "auto", False == off)
+        if self.stream is True:
+            object.__setattr__(self, "stream", AUTO)
+        elif self.stream is False:
+            object.__setattr__(self, "stream", None)
+        if self.stream is not None and self.stream != AUTO and (
+                not isinstance(self.stream, int) or self.stream < 1):
+            raise ValueError(f"stream must be None, a positive int "
+                             f"chunk size, or {AUTO!r}, got "
+                             f"{self.stream!r}")
+        if self.stream is not None:
+            if not self.slab_free:
+                raise ValueError("stream= requires slab_free=True: the "
+                                 "streamed representation only exists "
+                                 "behind the GramOperator interface")
+            if self.layout not in ("serial", AUTO):
+                raise ValueError(f"stream= requires the serial layout "
+                                 f"(the distributed layouts shard the "
+                                 f"data instead of streaming it), got "
+                                 f"layout={self.layout!r}")
+            if self.approx not in (None, AUTO):
+                raise ValueError("stream= requires the exact "
+                                 "representation (a low-rank factor is "
+                                 "already O(m*l)-small — stream and "
+                                 "approx are mutually exclusive)")
         if self.method not in METHODS:
             raise ValueError(
                 f"method must be one of {METHODS}, got {self.method!r}")
@@ -247,7 +285,8 @@ class SolverOptions:
     def needs_autotune(self) -> bool:
         """Any knob left at "auto" — ``fit`` resolves them through
         ``repro.tune.autotune`` before solving (DESIGN.md §10)."""
-        return AUTO in (self.s, self.b, self.layout, self.approx)
+        return AUTO in (self.s, self.b, self.layout, self.approx,
+                        self.stream)
 
     @property
     def s_eff(self) -> int:
@@ -807,6 +846,14 @@ def _build_representation(A, cfg, opts: SolverOptions):
     Nystrom fits — uniform OR kmeans landmarks — are reproducible
     end-to-end from the single facade seed."""
     if opts.approx is None:
+        if opts.stream:
+            if opts.stream == AUTO:
+                raise ValueError('stream="auto" is unresolved — fit() '
+                                 'resolves it via repro.tune.autotune.'
+                                 'resolve_options before building the '
+                                 'representation')
+            return (StreamingGramOperator.from_dense(
+                A, cfg.kernel, chunk_rows=int(opts.stream)), A)
         return ExactGramOperator(A, cfg.kernel), A
     l = min(opts.landmarks, A.shape[0])
     lkey = jax.random.fold_in(jax.random.key(opts.seed), 1)

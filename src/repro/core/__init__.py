@@ -1,5 +1,6 @@
 from .kernels import (KernelConfig, GramOperator, ExactGramOperator,
-                      LowRankGramOperator, gram_slab, gram_full,
+                      LowRankGramOperator, StreamingGramOperator,
+                      gram_slab, gram_full,
                       apply_epilogue, kernel_diag, kmv_apply,
                       kmv_slab_free)
 from .loop import (DIVERGED_METRIC, DIVERGED_NONE, DIVERGED_NONFINITE,

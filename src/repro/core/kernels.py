@@ -464,8 +464,187 @@ class LowRankGramOperator(GramOperator):
         return self.Phi @ (self.Phi.T @ X)        # O(m l) exact in K~
 
 
+def _chunk(X, chunk_rows: int):
+    """(m, ...) -> (nc, chunk_rows, ...) with a zero-padded tail chunk."""
+    m = X.shape[0]
+    nc = -(-m // chunk_rows)
+    pad = nc * chunk_rows - m
+    if pad:
+        X = jnp.pad(X, ((0, pad),) + ((0, 0),) * (X.ndim - 1))
+    return X.reshape((nc, chunk_rows) + X.shape[1:])
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingGramOperator(GramOperator):
+    """Out-of-core exact-kernel representation (DESIGN.md §14): the data
+    lives CHUNKED as ``Xc: (n_chunks, chunk_rows, n)`` row blocks — on
+    device this is the layout the double-buffered streaming KMV kernel
+    (``kernels/kmv_stream.py``) DMAs from ANY/HBM memory two slots at a
+    time, so no reduction ever holds the full X (or any m-tall slab) in
+    its working set.  Every ``GramOperator`` reduction is a scan over
+    the chunk axis:
+
+      ``matvec``/``serve_block``/``full_matvec``  accumulate
+          ``K(chunk_i, B)^T x_i`` chunk by chunk (the streamed KMV —
+          fused in the Pallas kernel when ``matvec_impl`` is set);
+      ``apply_at``  emits ``K(chunk_i, B) @ w`` piece by piece (the
+          guard path's residual recurrence);
+      ``cross_block``/``diag``/``rows``  gather only the sampled
+          ``sb`` rows (two tiny index ops per chunk-crossing gather).
+
+    The tail chunk is zero-padded; padded rows are contraction-safe
+    (their right-hand-side rows are zero) and sliced off wherever rows
+    are EMITTED.  ``m`` is the true row count.  A registered pytree like
+    the resident operators, so it crosses jit boundaries, vmaps
+    unbatched under solver fleets, and drops into all four round-fn
+    factories, the guard, and the batched predictor unchanged.
+    """
+
+    Xc: jnp.ndarray                        # (nc, chunk_rows, n)
+    cfg: KernelConfig
+    m: int                                 # true rows (static)
+    matvec_impl: Optional[callable] = None  # (Xc, B, Xvc, cfg) -> (r, c)
+
+    @classmethod
+    def from_dense(cls, A: jnp.ndarray, cfg: KernelConfig,
+                   chunk_rows: int, matvec_impl=None
+                   ) -> "StreamingGramOperator":
+        if not isinstance(chunk_rows, int) or chunk_rows < 1:
+            raise ValueError(f"chunk_rows must be a positive int, got "
+                             f"{chunk_rows!r}")
+        chunk_rows = min(chunk_rows, A.shape[0])
+        return cls(_chunk(A, chunk_rows), cfg, A.shape[0],
+                   matvec_impl=matvec_impl)
+
+    @property
+    def chunk_rows(self) -> int:
+        return self.Xc.shape[1]
+
+    @property
+    def n_chunks(self) -> int:
+        return self.Xc.shape[0]
+
+    def rows(self, idx: jnp.ndarray) -> jnp.ndarray:
+        cr = self.chunk_rows
+        return self.Xc[idx // cr, idx % cr]
+
+    def _chunk_rhs(self, X):
+        """Chunk an (m, c) right-hand side to the Xc layout."""
+        return _chunk(X, self.chunk_rows)
+
+    def _stream_kmv(self, B: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+        """``K(A, B)^T X`` streamed over the chunk axis: the core
+        contraction behind matvec / serve_block / full_matvec."""
+        vec = X.ndim == 1
+        Xvc = self._chunk_rhs(X[:, None] if vec else X)  # (nc, cr, c)
+        if self.matvec_impl is not None:
+            out = self.matvec_impl(self.Xc, B, Xvc, self.cfg)
+        else:
+            cfg = self.cfg
+            cs = jnp.sum(B * B, axis=1) if cfg.name == RBF else None
+
+            def body(acc, chunk):
+                a_blk, x_blk = chunk
+                dots = a_blk @ B.T                       # (cr, r)
+                if cfg.name == RBF:
+                    Kb = apply_epilogue(dots, cfg,
+                                        jnp.sum(a_blk * a_blk, axis=1),
+                                        cs)
+                else:
+                    Kb = apply_epilogue(dots, cfg)
+                return acc + Kb.T @ x_blk, None
+
+            out, _ = jax.lax.scan(
+                body, jnp.zeros((B.shape[0], Xvc.shape[2]), X.dtype),
+                (self.Xc, Xvc))
+        out = out.astype(X.dtype)
+        return out[:, 0] if vec else out
+
+    def matvec(self, idx: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+        return self._stream_kmv(self.rows(idx), X)
+
+    def cross_block(self, idx: jnp.ndarray) -> jnp.ndarray:
+        B = self.rows(idx)
+        return gram_slab(B, B, self.cfg)
+
+    def diag(self, idx: jnp.ndarray) -> jnp.ndarray:
+        return kernel_diag(self.rows(idx), self.cfg)
+
+    @property
+    def n_samples(self) -> int:
+        return self.m
+
+    @property
+    def feature_dim(self) -> int:
+        return self.Xc.shape[2]
+
+    @property
+    def dtype(self):
+        return self.Xc.dtype
+
+    def scale_rows(self, y: jnp.ndarray) -> "StreamingGramOperator":
+        """Operator over ``diag(y) A`` (K-SVM scaling, same convention
+        as ``ExactGramOperator.scale_rows``), chunked in place — the
+        padded tail rows of y are zero, so padded data rows stay zero."""
+        yc = self._chunk_rhs(y[:, None])                 # (nc, cr, 1)
+        return dataclasses.replace(self, Xc=yc * self.Xc)
+
+    def take(self, idx) -> "StreamingGramOperator":
+        """Support-vector compaction (host-side, concrete idx): gather
+        the kept rows and re-chunk."""
+        kept = self.rows(jnp.asarray(idx))
+        cr = min(self.chunk_rows, kept.shape[0])
+        return dataclasses.replace(self, Xc=_chunk(kept, cr),
+                                   m=kept.shape[0])
+
+    def serve_block(self, Xq: jnp.ndarray, sw: jnp.ndarray) -> jnp.ndarray:
+        # K(Xq, A) @ sw == K(A, Xq)^T sw: the queries ARE the sampled
+        # rows — one streamed KMV, same pipe as training
+        return self._stream_kmv(Xq, sw)
+
+    def apply_at(self, idx: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        """``K[:, idx] @ w`` emitted chunk by chunk (the guard path's
+        residual recurrence): each chunk builds its (cr, sb) kernel tile
+        against the sampled rows, applies w, and is discarded."""
+        B = self.rows(idx)
+        cfg = self.cfg
+        vec = w.ndim == 1
+        Wc = w[:, None] if vec else w
+        cs = jnp.sum(B * B, axis=1) if cfg.name == RBF else None
+
+        def body(carry, a_blk):
+            dots = a_blk @ B.T                           # (cr, sb)
+            if cfg.name == RBF:
+                Kb = apply_epilogue(dots, cfg,
+                                    jnp.sum(a_blk * a_blk, axis=1), cs)
+            else:
+                Kb = apply_epilogue(dots, cfg)
+            return carry, Kb @ Wc                        # (cr, c)
+
+        _, tiles = jax.lax.scan(body, 0.0, self.Xc)
+        out = tiles.reshape(-1, Wc.shape[1])[:self.m].astype(Wc.dtype)
+        return out[:, 0] if vec else out
+
+    def full_matvec(self, X: jnp.ndarray) -> jnp.ndarray:
+        """``K @ X`` exactly, chunk x chunk: the j-th output piece is
+        ``K(chunk_j, A) @ X = K(A, chunk_j)^T X`` — one streamed KMV per
+        chunk (nc^2 tiles total, never more than one in flight)."""
+        vec = X.ndim == 1
+
+        def piece(_, b_blk):
+            return _, self._stream_kmv(b_blk, X)         # (cr,) / (cr, c)
+
+        _, tiles = jax.lax.scan(piece, 0.0, self.Xc)
+        out = (tiles.reshape(-1) if vec
+               else tiles.reshape(-1, X.shape[1]))[:self.m]
+        return out.astype(X.dtype)
+
+
 jax.tree_util.register_dataclass(
     ExactGramOperator, data_fields=("A",),
     meta_fields=("cfg", "matvec_impl", "block"))
 jax.tree_util.register_dataclass(
     LowRankGramOperator, data_fields=("Phi", "fmap"), meta_fields=())
+jax.tree_util.register_dataclass(
+    StreamingGramOperator, data_fields=("Xc",),
+    meta_fields=("cfg", "m", "matvec_impl"))

@@ -229,13 +229,22 @@ def fleet_fit_cost(m: int, n: int, kernel: str, F: int, *, b: int = 1,
 def modeled_predict_cost(m: int, n: int, q: int, kernel: str, *,
                          approx: str = None, landmarks: int = 0,
                          sv_fraction: float = 1.0,
-                         mach: Machine = None) -> dict:
+                         mach: Machine = None, stream: int = 0,
+                         word: int = 4,
+                         dma_bps: float = None) -> dict:
     """Per-batch serving cost (DESIGN.md §9) for ``q`` queries against an
     ``m``-sample model: exact representations pay the ``q x m_sv`` kernel
     block (KMV-streamed, never materialized — flops only, zero slab
     words), low-rank ones pay the O(l)-per-query feature map.  The
     crossover ``l < sv_fraction * m * n / (n + l)`` is the serving
-    argument for Nystrom (Hsieh et al., CA-SVM lineage)."""
+    argument for Nystrom (Hsieh et al., CA-SVM lineage).
+
+    ``stream=chunk_rows`` prices OUT-OF-CORE query batches (DESIGN.md
+    §14): the query stream arrives in (chunk_rows x n) host chunks DMA'd
+    through the same double-buffered pipe as training, so the block pays
+    ``max(t_comp, t_dma)`` per chunk plus the warm-up DMA instead of
+    pure compute — the added keys ``t_dma``/``t_overlap``/
+    ``compute_bound`` expose the regime."""
     mach = mach or Machine()
     mu = _mu(mach, kernel)
     if approx:
@@ -245,8 +254,20 @@ def modeled_predict_cost(m: int, n: int, q: int, kernel: str, *,
     else:
         msv = max(1, int(sv_fraction * m))
         F = q * msv * n + mu * q * msv + q * msv
-    return {"flops": F, "time": mach.gamma * F,
+    t_comp = mach.gamma * F
+    cost = {"flops": F, "time": t_comp,
             "flops_per_query": F / max(q, 1)}
+    if stream and stream > 0:
+        bps = STREAM_DMA_BPS if dma_bps is None else dma_bps
+        n_chunks = max(1, -(-q // stream))
+        t_dma = word * q * n / bps           # total query-chunk DMA
+        per_comp, per_dma = t_comp / n_chunks, t_dma / n_chunks
+        time = per_dma + n_chunks * max(per_comp, per_dma)
+        cost.update(time=time, t_dma=t_dma,
+                    t_overlap=time - t_comp,
+                    stream_chunks=n_chunks,
+                    compute_bound=per_comp >= per_dma)
+    return cost
 
 
 # --------------------------------------------------------------------------
@@ -458,6 +479,132 @@ def slab_fits_hbm(m: int, sb: int, hbm_bytes: int = 16 * 2 ** 30,
     (A's own footprint is not counted, so this is an optimistic bound) —
     the slab-free path has no such ceiling on m."""
     return word * m * sb < hbm_bytes
+
+
+# --------------------------------------------------------------------------
+# Streaming pipeline model (DESIGN.md §14): the double-buffered
+# out-of-core KMV (kernels/kmv_stream.py) DMAs (chunk_rows x n) row
+# blocks from slow memory while the previous block contracts, so the
+# steady-state pipe pays max(t_dma, t_comp) per chunk instead of the
+# sum.  These closed forms (a) price that overlap, (b) bound the
+# double-buffered VMEM working set a chunk size implies, and (c) decide
+# when streaming is REQUIRED — the resident working set exceeding the
+# device-memory budget — which is the autotuner's trigger for
+# ``chunk_rows="auto"`` resolution.
+# --------------------------------------------------------------------------
+
+STREAM_DMA_BPS = 800e9             # HBM-class chunk DMA bandwidth (B/s)
+
+
+def stream_chunk_cost(chunk_rows: int, n: int, sb: int, kernel: str, *,
+                      c: int = 1, mach: Machine = None, word: int = 4,
+                      dma_bps: float = STREAM_DMA_BPS) -> dict:
+    """One pipeline stage: DMA of a (chunk_rows x n) data block plus its
+    (chunk_rows x c) right-hand-side block vs the (GEMM + epilogue +
+    contract) compute on the previous block.  ``compute_bound`` is the
+    overlap regime where the DMA is (nearly) free."""
+    mach = mach or Machine()
+    mu = _mu(mach, kernel)
+    bytes_in = word * (chunk_rows * n + chunk_rows * c)
+    t_dma = bytes_in / dma_bps
+    flops = (chunk_rows * sb * n        # dots = chunk @ B^T
+             + mu * chunk_rows * sb     # Table-1 epilogue
+             + chunk_rows * sb * c)     # acc += ktile^T @ x
+    t_comp = mach.gamma * flops
+    return {"bytes": bytes_in, "flops": flops, "t_dma": t_dma,
+            "t_comp": t_comp, "compute_bound": t_comp >= t_dma}
+
+
+def stream_pipeline_cost(m: int, n: int, sb: int, chunk_rows: int,
+                         kernel: str, *, c: int = 1, mach: Machine = None,
+                         word: int = 4,
+                         dma_bps: float = STREAM_DMA_BPS) -> dict:
+    """Whole streamed KMV: warm-up DMA of chunk 0, then ``n_chunks``
+    steady stages at ``max(t_dma, t_comp)`` each (double-buffered
+    overlap).  ``time_unoverlapped`` is the same pipe with blocking
+    copies (the sum per stage) and ``resident_time`` the pure-compute
+    bound of an HBM-resident KMV — ``streamed_over_resident`` is the
+    modeled slowdown factor fig10's measured gate mirrors (~1.0 when
+    compute-bound, up to t_dma/t_comp when DMA-bound)."""
+    n_chunks = -(-m // chunk_rows)
+    per = stream_chunk_cost(chunk_rows, n, sb, kernel, c=c, mach=mach,
+                            word=word, dma_bps=dma_bps)
+    steady = max(per["t_dma"], per["t_comp"])
+    time = per["t_dma"] + n_chunks * steady
+    unoverlapped = n_chunks * (per["t_dma"] + per["t_comp"])
+    resident = max(n_chunks * per["t_comp"], 1e-30)
+    return dict(per, n_chunks=n_chunks, time=time,
+                time_unoverlapped=unoverlapped,
+                resident_time=resident,
+                streamed_over_resident=time / resident,
+                overlap_speedup=unoverlapped / max(time, 1e-30))
+
+
+def stream_working_set_bytes(chunk_rows: int, n: int, sb: int, *,
+                             c: int = 1, word: int = 4) -> int:
+    """On-chip bytes the streamed contraction keeps live: TWO slots of
+    the data chunk and of its right-hand-side chunk (double buffering),
+    the (sb x n) sampled rows, the transient (chunk_rows x sb) kernel
+    tile, and the (sb x c) accumulator."""
+    return word * (2 * chunk_rows * n + 2 * chunk_rows * c
+                   + sb * n + chunk_rows * sb + sb * c)
+
+
+def stream_chunk_fits(chunk_rows: int, n: int, sb: int, *, c: int = 1,
+                      word: int = 4,
+                      budget_bytes: int = None) -> bool:
+    """Whether a chunk size's double-buffered working set fits the
+    on-chip budget (default: ``VMEM_BYTES``) — the feasibility
+    constraint ``choose_chunk_rows`` (and the streaming tests)
+    enforce."""
+    if budget_bytes is None:
+        budget_bytes = VMEM_BYTES
+    return stream_working_set_bytes(chunk_rows, n, sb, c=c,
+                                    word=word) <= budget_bytes
+
+
+def streaming_required(m: int, n: int, sb: int, *, c: int = 1,
+                       word: int = 4,
+                       device_bytes: int = 16 * 2 ** 30) -> bool:
+    """Whether the RESIDENT slab-free round — X (m x n) plus the KMV
+    round set (the x vector, the sampled rows, the contracted outputs) —
+    exceeds the device-memory budget: the gate between "fits in HBM"
+    and the streamed pipeline (ISSUE/ROADMAP's out-of-core axis)."""
+    resident = word * (m * n + c * m + sb * n + sb * c)
+    return resident > device_bytes
+
+
+STREAM_CHUNK_CANDIDATES = (128, 256, 512, 1024, 2048, 4096, 8192)
+
+
+def choose_chunk_rows(m: int, n: int, sb: int, kernel: str, *, c: int = 1,
+                      mach: Machine = None, word: int = 4,
+                      dma_bps: float = STREAM_DMA_BPS,
+                      budget_bytes: int = None,
+                      candidates=STREAM_CHUNK_CANDIDATES,
+                      return_frontier: bool = False):
+    """Resolve ``chunk_rows="auto"``: the best modeled pipeline time
+    among chunk sizes whose double-buffered working set fits the
+    on-chip budget (ties break toward the smaller working set).  The
+    smallest candidate is always kept as a floor so the search cannot
+    come back empty.  Mirrors ``best_s``'s frontier contract."""
+    cands = sorted({min(cr, max(8, m)) for cr in candidates})
+    frontier = []
+    for i, cr in enumerate(cands):
+        feasible = i == 0 or stream_chunk_fits(cr, n, sb, c=c, word=word,
+                                               budget_bytes=budget_bytes)
+        cost = stream_pipeline_cost(m, n, sb, cr, kernel, c=c, mach=mach,
+                                    word=word, dma_bps=dma_bps)
+        frontier.append({"chunk_rows": cr, "time": cost["time"],
+                         "compute_bound": cost["compute_bound"],
+                         "working_set_bytes": stream_working_set_bytes(
+                             cr, n, sb, c=c, word=word),
+                         "feasible": feasible})
+    feas = [f for f in frontier if f["feasible"]]
+    best = min(feas, key=lambda f: (f["time"], f["working_set_bytes"]))
+    if return_frontier:
+        return best["chunk_rows"], frontier
+    return best["chunk_rows"]
 
 
 # --------------------------------------------------------------------------

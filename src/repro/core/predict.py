@@ -137,14 +137,20 @@ class BatchedPredictor:
 
     def __init__(self, op: GramOperator, w, *, batch: int = 1024,
                  scale: float = 1.0, compact: bool = False,
-                 compact_tol: float = 0.0):
+                 compact_tol: float = 0.0, stream: Optional[int] = None):
         if not isinstance(batch, int) or batch < 1:
             raise ValueError(f"batch must be a positive int, got {batch!r}")
+        if stream is not None and (not isinstance(stream, int)
+                                   or stream < 1):
+            raise ValueError(f"stream must be None or a positive int "
+                             f"(query rows per host chunk), got "
+                             f"{stream!r}")
         if compact:
             op, w = compact_support(op, w, tol=compact_tol)
         self.op = op
         self.batch = batch
         self.scale = scale
+        self.stream = stream
         self.sw = op.serve_weights(w)
 
     def block_shape(self, q: int) -> int:
@@ -180,22 +186,42 @@ class BatchedPredictor:
                 self.op, self.sw, jnp.zeros((qb, fd), self.op.dtype)))
         return len(self.bucket_sizes())
 
-    def __call__(self, A_test: jnp.ndarray) -> jnp.ndarray:
+    def _serve_chunk(self, A_chunk) -> jnp.ndarray:
+        """Bucketed block loop over one (device-resident) query chunk —
+        the pre-streaming ``__call__`` body, unscaled."""
+        q = A_chunk.shape[0]
+        out, lo = [], 0
+        while lo < q:
+            qb = self.block_shape(q - lo)    # tail drops to its own
+            Xq = A_chunk[lo:lo + qb]         # (cached) pow-2 bucket
+            if Xq.shape[0] != qb:            # pad to the block shape,
+                pad = qb - Xq.shape[0]       # slice off below
+                Xq = jnp.pad(jnp.asarray(Xq), ((0, pad), (0, 0)))
+            out.append(_serve_block(self.op, self.sw, jnp.asarray(Xq)))
+            lo += qb
+        return jnp.concatenate(out)[:q] if len(out) > 1 else out[0][:q]
+
+    def __call__(self, A_test) -> jnp.ndarray:
         q = A_test.shape[0]
         if q == 0:                       # drained queue: graceful empty
             # shape follows the weights: (0,) for one model, (0, F) for
             # a stacked fleet/registry group
             return jnp.zeros((0,) + self.sw.shape[1:], self.sw.dtype)
-        out, lo = [], 0
-        while lo < q:
-            qb = self.block_shape(q - lo)    # tail drops to its own
-            Xq = A_test[lo:lo + qb]          # (cached) pow-2 bucket
-            if Xq.shape[0] != qb:            # pad to the block shape,
-                pad = qb - Xq.shape[0]       # slice off below
-                Xq = jnp.pad(Xq, ((0, pad), (0, 0)))
-            out.append(_serve_block(self.op, self.sw, Xq))
-            lo += qb
-        f = jnp.concatenate(out)[:q] if len(out) > 1 else out[0][:q]
+        if self.stream is not None and q > self.stream:
+            # out-of-core query stream (DESIGN.md §14): A_test may be a
+            # host array / memmap far larger than device memory — only
+            # ``stream`` query rows are sliced (and transferred) at a
+            # time, and each finished chunk's scores are pulled back to
+            # host before the next chunk is touched, so the device
+            # working set stays one chunk of queries + one chunk of
+            # scores regardless of q.
+            parts = []
+            for lo in range(0, q, self.stream):
+                f_c = self._serve_chunk(A_test[lo:lo + self.stream])
+                parts.append(np.asarray(jax.device_get(f_c)))
+            f = jnp.asarray(np.concatenate(parts))
+        else:
+            f = self._serve_chunk(A_test)
         return f * self.scale if self.scale != 1.0 else f
 
 

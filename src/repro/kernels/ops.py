@@ -18,9 +18,11 @@ import os
 
 import jax
 
-from repro.core.kernels import ExactGramOperator, KernelConfig
+from repro.core.kernels import (ExactGramOperator, KernelConfig,
+                                StreamingGramOperator)
 from .gram import gram_pallas
 from .kmv import kmv_pallas
+from .kmv_stream import kmv_stream_pallas
 from .ref import gram_ref, kmv_ref
 
 
@@ -51,6 +53,43 @@ def kmv(A, B, X, cfg: KernelConfig, *, force_ref: bool = False, **tiles):
     if force_ref:
         return kmv_ref(A, B, X, cfg)
     return kmv_pallas(A, B, X, cfg, interpret=_interpret(), **tiles)
+
+
+def kmv_stream(Xc, B, Xvc, cfg: KernelConfig, *, force_ref: bool = False,
+               **kw):
+    """Out-of-core ``K(A, B)^T X`` over CHUNKED data (DESIGN.md §14):
+    the double-buffered DMA pipeline kernel on TPU, interpret mode
+    elsewhere; ``force_ref`` flattens the chunks and materializes the
+    slab (oracle)."""
+    if force_ref:
+        nc, cr, n = Xc.shape
+        return kmv_ref(Xc.reshape(nc * cr, n), B,
+                       Xvc.reshape(nc * cr, -1), cfg)
+    return kmv_stream_pallas(Xc, B, Xvc, cfg, interpret=_interpret(), **kw)
+
+
+def make_streaming_op_factory(chunk_rows: int, use_pallas: bool = True,
+                              interpret=None):
+    """op_factory for out-of-core solves: a ``StreamingGramOperator``
+    whose streamed contraction runs the double-buffered DMA Pallas
+    kernel (``kernels/kmv_stream.py``) — chunk i+1 copies in while
+    chunk i contracts, so neither X nor any m-tall slab is ever
+    VMEM/HBM-working-set resident.  ``use_pallas=False`` keeps the
+    lax.scan fallback (the facade's default off-TPU)."""
+    impl = None
+    if use_pallas:
+        interp = _interpret(interpret)
+
+        def impl(Xc, B, Xvc, cfg):
+            return kmv_stream_pallas(Xc, B, Xvc, cfg,
+                                     interpret=interp).astype(Xvc.dtype)
+
+    def factory(A, cfg):
+        return StreamingGramOperator.from_dense(A, cfg,
+                                                chunk_rows=chunk_rows,
+                                                matvec_impl=impl)
+
+    return factory
 
 
 def sdpa_flash(q, k, v, causal=True, interpret=None, bq=256, bk=256):

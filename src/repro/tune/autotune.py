@@ -35,8 +35,8 @@ from typing import Optional, Tuple
 
 import jax
 
-from repro.core.perf_model import (Machine, modeled_fit_cost,
-                                   slab_fits_hbm)
+from repro.core.perf_model import (Machine, choose_chunk_rows,
+                                   modeled_fit_cost, slab_fits_hbm)
 
 S_CANDIDATES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 B_CANDIDATES = (1, 2, 4, 8, 16, 32, 64)
@@ -107,12 +107,20 @@ def resolve_options(m: int, n: int, cfg, opts, *, problem: str = "krr",
                           if l != "2d" or m % max(ndev, 1) == 0)
     else:
         lay_cands = (opts.layout,)
+    if opts.stream is not None:
+        # the streamed representation is serial + exact by construction
+        # (SolverOptions validates the pinned combinations; here the
+        # remaining AUTO dimensions are restricted to the compatible
+        # subspace)
+        lay_cands = ("serial",)
     assert all(l in LAYOUTS for l in lay_cands)
     if opts.approx == AUTO:
         # a rank >= m "approximation" is strictly more work than exact
         ap_cands = ((None, "nystrom") if opts.landmarks < m else (None,))
     else:
         ap_cands = (opts.approx,)
+    if opts.stream is not None:
+        ap_cands = (None,)
 
     frontier = []
     for lay in lay_cands:
@@ -122,9 +130,11 @@ def resolve_options(m: int, n: int, cfg, opts, *, problem: str = "krr",
             for b in b_cands:
                 for s in s_cands:
                     # KMV working-set bound: identical constraint to
-                    # perf_model.best_s (s=1 is the classical floor)
-                    feasible = s == 1 or slab_fits_hbm(m, s * b,
-                                                       hbm_bytes)
+                    # perf_model.best_s (s=1 is the classical floor).
+                    # Streamed runs have no m-tall working set at all —
+                    # that ceiling is exactly what streaming removes.
+                    feasible = (opts.stream is not None or s == 1
+                                or slab_fits_hbm(m, s * b, hbm_bytes))
                     cost = modeled_fit_cost(
                         m, n, cfg.kernel.name, b=b, s=s,
                         iters=opts.max_iters, P=P, mach=mach,
@@ -154,6 +164,12 @@ def resolve_options(m: int, n: int, cfg, opts, *, problem: str = "krr",
     resolved = dataclasses.replace(
         opts, s=winner["s"], b=winner["b"], layout=winner["layout"],
         approx=winner["approx"])
+    if resolved.stream == AUTO:
+        # chunk_rows="auto": best modeled streaming-pipeline time whose
+        # double-buffered working set fits the on-chip budget, at the
+        # winner's (s, b) slab width (DESIGN.md §14)
+        resolved = dataclasses.replace(resolved, stream=choose_chunk_rows(
+            m, n, winner["s"] * winner["b"], cfg.kernel.name, mach=mach))
     if resolved.guard and resolved.recompute_every == AUTO:
         # price drift correction for the WINNER (s, b, layout): the
         # cadence that keeps guarded overhead under the budget.  The
@@ -196,13 +212,20 @@ def _probe(A, y, cfg, opts, problem, candidates):
     measurement — and report wall seconds."""
     from repro.api import _fit
 
+    from repro.api import AUTO
+
     rows = []
     for cand in candidates:
         s_eff = cand["s"] if opts.method == "sstep" else 1
+        stream = opts.stream
+        if stream == AUTO:               # concretize per candidate so the
+            m, n = A.shape               # probe fit needs no re-tuning
+            stream = choose_chunk_rows(m, n, cand["s"] * cand["b"],
+                                       cfg.kernel.name)
         probe_opts = dataclasses.replace(
             opts, s=cand["s"], b=cand["b"], layout=cand["layout"],
             approx=cand["approx"], tol=0.0, record=False, probe=0,
-            max_iters=max(opts.probe * s_eff, 1))
+            stream=stream, max_iters=max(opts.probe * s_eff, 1))
         _fit(problem, A, y, cfg, probe_opts)         # compile + warm
         t0 = time.perf_counter()
         _fit(problem, A, y, cfg, probe_opts)

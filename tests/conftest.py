@@ -20,12 +20,35 @@ import pytest
 # on the distributed/system tests false-positives on masked lanes
 KERNEL_TEST_MODULES = frozenset({
     "test_kmv", "test_pallas_gram", "test_pallas_rmsnorm",
-    "test_flash_attention",
+    "test_flash_attention", "test_streaming",
+})
+
+# modules whose accumulated jit cache is large enough to destabilize the
+# rest of a single-process full-suite run (the pre-existing full-suite
+# XLA crash): their compiled executables are dropped when the module
+# finishes so later modules start from a clean compilation cache.  CI
+# additionally shards tier-1 into separate pytest PROCESSES (see
+# .github/workflows/ci.yml) — this fixture is the in-process half for
+# plain local `pytest` runs.
+HEAVY_JIT_MODULES = frozenset({
+    "test_distributed", "test_flash_attention", "test_moe_dispatch",
+    "test_models_smoke", "test_pallas_gram", "test_ssd",
+    "test_streaming",
 })
 
 
 def sanitize_enabled() -> bool:
     return os.environ.get("REPRO_SANITIZE", "") == "1"
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jit_caches_after_heavy_module(request):
+    yield
+    name = getattr(getattr(request, "module", None), "__name__",
+                   "").rsplit(".", 1)[-1]
+    if name in HEAVY_JIT_MODULES:
+        import jax
+        jax.clear_caches()
 
 
 @pytest.fixture(autouse=True)
