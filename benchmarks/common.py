@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import json
 import os
+import platform
+import subprocess
 import time
 
 import jax
@@ -24,7 +26,41 @@ def timeit(fn, *args, warmup=1, iters=3):
     return ts[len(ts) // 2]
 
 
+def env_fingerprint() -> dict:
+    """Where a benchmark number came from: a perf trajectory point is
+    only comparable to points from the same software/hardware coordinates,
+    so every BENCH_*.json carries them.  Exception-safe: a missing git
+    binary or detached worktree degrades to "unknown", never a crash."""
+    import jaxlib
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip()
+    except Exception:
+        sha = "unknown"
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": dev.platform,
+        "device_kind": dev.device_kind,
+        "python": platform.python_version(),
+        "git_sha": sha,
+    }
+
+
 def save_json(name: str, obj):
+    """Write a benchmark payload, stamped with ``env_fingerprint()``:
+    dict payloads gain a leading ``env`` key, list payloads wrap as
+    ``{"env": ..., "records": [...]}`` (consumers that iterate rows read
+    ``records``)."""
+    fp = env_fingerprint()
+    if isinstance(obj, dict):
+        obj = {"env": fp, **obj}
+    elif isinstance(obj, list):
+        obj = {"env": fp, "records": obj}
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name)
     payload = json.dumps(obj, indent=1, default=str)

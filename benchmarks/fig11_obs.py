@@ -1,0 +1,270 @@
+"""fig11: the price and product of telemetry (DESIGN.md §15).
+
+Two overhead gates and three artifact checks:
+
+  * GUARDED SOLVE — the same guarded s-step KRR fit with telemetry off
+    vs on (fresh ``Telemetry`` per rep: host spans + traced marks at
+    the sync points + guard counters).  Best-of-N wall clock; the
+    enabled/disabled ratio must stay within ``GATE`` (3%).
+  * SERVING DRIVE — a fig9-style ticket stream through ``ServingEngine``
+    with and without the serving instruments (queue gauge, ticket
+    counters, occupancy + latency histograms).  Same best-of-N gate.
+  * the telemetry-ON artifacts must be USABLE: the modeled-vs-measured
+    audit reconciles the instrumented fit, the merged solve+serve trace
+    exports as schema-valid Chrome-trace JSON (committed to
+    ``results/fig11_trace.json`` — CI uploads it as an artifact), and
+    the engine metrics parse as Prometheus text exposition.
+
+Sub-millisecond gates on a shared host are jittery, so a missed gate
+retries on a fresh window (bounded attempts), mirroring fig9.
+"""
+from __future__ import annotations
+
+import gc
+import os
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import KernelRidge, SolverOptions
+from repro.core.kernels import KernelConfig
+from repro.data.synthetic import classification_dataset
+from repro.obs import Telemetry
+from repro.serve import ModelRegistry, ServingEngine
+
+from .common import RESULTS_DIR, emit, save_json
+
+GATE = 0.03                      # enabled/disabled overhead ceiling
+SLOTS = 32
+
+# one Prometheus text-exposition sample line:  name{labels} value
+_PROM_SAMPLE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [^ ]+$")
+
+
+def _problem(m, n):
+    A, _ = classification_dataset(jax.random.key(0), m, n)
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(np.asarray(A) @ rng.standard_normal(n)
+                    + 0.1 * rng.standard_normal(m), A.dtype)
+    return A, y
+
+
+def _opts(iters, telemetry):
+    # guarded s-step KRR: tolerance path + drift correction + segment
+    # seams — every mark site in the protocol is live.  Cadence 16:
+    # each traced mark costs a fixed ~100us host-callback round trip,
+    # so the gate prices telemetry at a practical check cadence on a
+    # solve whose rounds do real work — not callbacks back to back.
+    return SolverOptions(method="sstep", s=8, b=8, tol=1e-12,
+                         check_every=16, max_iters=iters, guard=True,
+                         recompute_every=16, seed=3, telemetry=telemetry)
+
+
+def _best_of(fn, reps):
+    # GC paused across the timed reps (both sides of every gate see the
+    # same policy): in a long benchmark process a collection triggered
+    # mid-window traverses ten suites' worth of live jit caches, a
+    # multi-ms stall that would gate the collector, not telemetry
+    gc.collect()
+    gc.disable()
+    ts = []
+    try:
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    return min(ts)
+
+
+def _solve_overhead(A, y, iters, reps):
+    """(t_off, t_on, result_on): best-of-N walls for the telemetry-off
+    and telemetry-on guarded fits, plus one instrumented FitResult for
+    the audit/trace artifacts."""
+    kern = KernelConfig("rbf", sigma=1.0)
+
+    def fit(telemetry):
+        kr = KernelRidge(lam=1.0, kernel=kern,
+                         options=_opts(iters, telemetry))
+        return kr.fit(A, y)
+
+    # warm BOTH compile caches: marks=True/False are distinct static
+    # args, so each side pays its own trace before any timed window
+    fit(None)
+    fit(Telemetry())
+    t_off = _best_of(lambda: fit(None), reps)
+    t_on = _best_of(lambda: fit(Telemetry()), reps)
+    # the artifact fit runs LAST, fully warm: its "fit" span holds pure
+    # run time, so the audit's measured shares aren't compile-skewed
+    result_on = fit(Telemetry())
+    return t_off, t_on, result_on
+
+
+def _serve_drive(reg, names, Q, telemetry):
+    eng = ServingEngine(reg, slots=SLOTS, telemetry=telemetry)
+    for i in range(Q.shape[0]):
+        eng.submit(names[i % len(names)], Q[i])
+        if (i + 1) % 8 == 0:
+            eng.step()
+    eng.run_until_idle()
+    return eng
+
+
+def _serve_overhead(A, y, iters, tickets, reps):
+    kern = KernelConfig("rbf", sigma=1.0)
+    kr = KernelRidge(lam=1.0, kernel=kern,
+                     options=SolverOptions(method="sstep", s=8, b=8,
+                                           max_iters=iters, seed=4))
+    kr.fit(A, y)
+    reg = ModelRegistry(predict_batch=SLOTS)
+    names = ("krr",)
+    reg.register("krr", kr)
+    reg.warmup()
+    # each ticket carries a REAL query batch (ROWS rows), the practical
+    # operating point: the per-ticket instrument cost (a couple of
+    # counter incs + two histogram observes, ~5us) is fixed, so the
+    # gate must price it against tickets that do device work — single-
+    # row tickets would measure the metrics dict, not serving
+    rows = 32
+    Q = np.asarray(classification_dataset(
+        jax.random.key(5), tickets * rows,
+        A.shape[1])[0]).reshape(tickets, rows, A.shape[1])
+
+    _serve_drive(reg, names, Q, None)            # warm the step path
+    _serve_drive(reg, names, Q, Telemetry())
+    # INTERLEAVED off/on reps: host-state drift over a ~20ms drive is
+    # bigger than the 3% gate, so back-to-back blocks would gate the
+    # drift, not the telemetry — alternating pairs see the same host
+    ts_off, ts_on = [], []
+    tel_last = {}
+    gc.collect()
+    gc.disable()                       # see _best_of
+    try:
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            _serve_drive(reg, names, Q, None)
+            ts_off.append(time.perf_counter() - t0)
+            tel = Telemetry()
+            t0 = time.perf_counter()
+            _serve_drive(reg, names, Q, tel)
+            ts_on.append(time.perf_counter() - t0)
+            tel_last["tel"] = tel
+    finally:
+        gc.enable()
+    return min(ts_off), min(ts_on), tel_last["tel"]
+
+
+def _check_prometheus(text):
+    """Every non-comment line must be a well-formed sample; at least
+    the four serving instruments must be present."""
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    for ln in lines:
+        if ln.startswith("#"):
+            assert ln.startswith(("# HELP ", "# TYPE ")), ln
+            continue
+        assert _PROM_SAMPLE.match(ln), f"malformed sample line: {ln!r}"
+    for name in ("repro_serve_queue_depth", "repro_serve_tickets_total",
+                 "repro_serve_batch_occupancy",
+                 "repro_serve_ticket_latency_seconds"):
+        assert any(ln.startswith(name) or f" {name} " in ln
+                   for ln in lines), f"{name} missing from exposition"
+    return len(lines)
+
+
+def run(fast=False):
+    from repro.obs.audit import audit_fit
+    from repro.obs.export import save_trace, to_chrome_trace
+
+    m, n = (768, 32) if fast else (1024, 32)
+    iters = 512 if fast else 1024
+    tickets = 64 if fast else 128
+    reps = 5 if fast else 7
+    attempts = 5
+
+    A, y = _problem(m, n)
+
+    # ---- guarded solve: telemetry off vs on ----------------------------
+    for attempt in range(attempts):
+        t_off, t_on, result_on = _solve_overhead(A, y, iters, reps)
+        ov_solve = t_on / t_off - 1.0
+        if ov_solve <= GATE:
+            break
+        if attempt == attempts - 1:
+            raise AssertionError(
+                f"solve telemetry overhead {ov_solve:.1%} exceeds the "
+                f"{GATE:.0%} gate (off {t_off*1e3:.2f}ms vs on "
+                f"{t_on*1e3:.2f}ms)")
+        print(f"fig11: solve overhead attempt {attempt + 1} measured "
+              f"{ov_solve:.1%}; retrying on a fresh window")
+        time.sleep(0.3 * (attempt + 1))
+    emit("fig11/solve", t_on * 1e6,
+         f"overhead={ov_solve:+.2%};gate={GATE:.0%};"
+         f"off={t_off*1e3:.2f}ms")
+    print(f"fig11: guarded solve telemetry overhead {ov_solve:+.2%} "
+          f"(gate {GATE:.0%})")
+
+    # ---- serving drive: instruments off vs on --------------------------
+    for attempt in range(attempts):
+        s_off, s_on, serve_tel = _serve_overhead(A, y, iters, tickets,
+                                                 reps)
+        ov_serve = s_on / s_off - 1.0
+        if ov_serve <= GATE:
+            break
+        if attempt == attempts - 1:
+            raise AssertionError(
+                f"serving telemetry overhead {ov_serve:.1%} exceeds "
+                f"the {GATE:.0%} gate (off {s_off*1e3:.2f}ms vs on "
+                f"{s_on*1e3:.2f}ms)")
+        print(f"fig11: serve overhead attempt {attempt + 1} measured "
+              f"{ov_serve:.1%}; retrying on a fresh window")
+        time.sleep(0.3 * (attempt + 1))
+    emit("fig11/serve", s_on * 1e6,
+         f"overhead={ov_serve:+.2%};gate={GATE:.0%};"
+         f"tickets={tickets}")
+    print(f"fig11: serving telemetry overhead {ov_serve:+.2%} "
+          f"(gate {GATE:.0%})")
+
+    # ---- the artifacts the instrumented run must yield -----------------
+    report = audit_fit(result_on)
+    print(report.render())
+
+    tel = result_on.telemetry
+    tel.spans.extend(serve_tel.spans)
+    tel.marks.extend(serve_tel.marks)
+    trace_path = os.path.join(RESULTS_DIR, "fig11_trace.json")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    save_trace(trace_path, tel)        # validates the schema internally
+    n_events = len(to_chrome_trace(tel)["traceEvents"])
+    emit("fig11/trace", 0.0, f"events={n_events};path=results/"
+                             f"fig11_trace.json")
+
+    prom = serve_tel.metrics.to_prometheus_text()
+    n_lines = _check_prometheus(prom)
+    emit("fig11/prometheus", 0.0, f"lines={n_lines}")
+    print(f"fig11: audit ratio {report.ratio:.2f}, "
+          f"{len(report.flagged)} flagged phase(s); trace "
+          f"{n_events} events; prometheus {n_lines} lines parse")
+
+    save_json("fig11_obs.json", {
+        "solve": {"m": m, "n": n, "iters": iters, "reps": reps,
+                  "t_off_s": t_off, "t_on_s": t_on,
+                  "overhead": ov_solve, "gate": GATE,
+                  "spans": len(result_on.telemetry.spans),
+                  "marks": len(result_on.telemetry.marks)},
+        "serve": {"tickets": tickets, "reps": reps, "t_off_s": s_off,
+                  "t_on_s": s_on, "overhead": ov_serve, "gate": GATE},
+        "audit": report.to_dict(),
+        "trace": {"events": n_events,
+                  "path": "benchmarks/results/fig11_trace.json"},
+        "prometheus_lines": n_lines,
+    })
+
+
+if __name__ == "__main__":
+    import sys
+    run(fast="--fast" in sys.argv)

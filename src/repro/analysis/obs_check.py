@@ -1,0 +1,116 @@
+"""Traced-span pairing auditor for repro.obs (DESIGN.md §§11, 15).
+
+``obs.spans.span_begin``/``span_end`` fire through UNORDERED debug
+callbacks, so the recorder cannot detect a missing end at runtime — an
+unmatched begin is silently dropped by ``paired_marks()`` and the span
+simply vanishes from every trace and audit.  The invariant must
+therefore hold at the SOURCE: every ``span_begin(name)`` in traced code
+is paired with a ``span_end(name)`` in the SAME enclosing function (the
+round protocol's sync points are always intra-function), and span names
+are string literals (a computed name cannot be audited — and would
+re-stage the callback partial per value).
+
+* CHK-SPAN (error) — a ``span_begin`` without a same-function
+  ``span_end`` of the same literal name (or vice versa), or a
+  begin/end call whose name argument is not a string literal.
+  Anchors to the offending call.
+
+Purely syntactic (AST over ``src/repro``): the begin/end calls are
+module-level functions gated on a static flag, so call-site counting is
+exact — there is no dynamic dispatch to miss.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Tuple
+
+from .findings import ERROR, Finding
+
+SRC_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_BEGIN = "span_begin"
+_END = "span_end"
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _span_calls(fn: ast.AST) -> List[Tuple[str, ast.Call]]:
+    """Every span_begin/span_end call lexically inside ``fn`` but NOT
+    inside a nested function (the nested def is its own pairing
+    scope)."""
+    out: List[Tuple[str, ast.Call]] = []
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            if isinstance(child, ast.Call):
+                kind = _call_name(child)
+                if kind in (_BEGIN, _END):
+                    out.append((kind, child))
+            walk(child)
+
+    walk(fn)
+    return out
+
+
+def _check_function(path: str, fn) -> List[Finding]:
+    calls = _span_calls(fn)
+    if not calls:
+        return []
+    findings: List[Finding] = []
+    opens: Dict[str, int] = {}
+    closes: Dict[str, int] = {}
+    anchor: Dict[str, int] = {}
+    for kind, call in calls:
+        name_arg = call.args[0] if call.args else None
+        if not (isinstance(name_arg, ast.Constant)
+                and isinstance(name_arg.value, str)):
+            findings.append(Finding(
+                check="CHK-SPAN", severity=ERROR, path=path,
+                line=call.lineno,
+                message=f"{kind} name must be a string literal "
+                        f"(computed names defeat the static pairing "
+                        f"audit and re-stage the callback per value)"))
+            continue
+        name = name_arg.value
+        anchor.setdefault(name, call.lineno)
+        tally = opens if kind == _BEGIN else closes
+        tally[name] = tally.get(name, 0) + 1
+    for name in sorted(set(opens) | set(closes)):
+        nb, ne = opens.get(name, 0), closes.get(name, 0)
+        if nb != ne:
+            findings.append(Finding(
+                check="CHK-SPAN", severity=ERROR, path=path,
+                line=anchor[name],
+                message=f"traced span {name!r} has {nb} span_begin vs "
+                        f"{ne} span_end call sites in "
+                        f"{getattr(fn, 'name', '<module>')!r} — an "
+                        f"unmatched begin is silently dropped by "
+                        f"paired_marks()"))
+    return findings
+
+
+def run(root: str = SRC_ROOT) -> List[Finding]:
+    findings: List[Finding] = []
+    for dirpath, _dirs, files in os.walk(root):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.abspath(os.path.join(dirpath, fname))
+            with open(path, encoding="utf-8") as fh:
+                tree = ast.parse(fh.read(), filename=path)
+            for node in ast.walk(tree):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    findings.extend(_check_function(path, node))
+    return findings

@@ -91,6 +91,7 @@ from repro.resilience.checkpoint import (load_solve_state,
                                          save_solve_state,
                                          solve_fingerprint)
 from repro.resilience.faults import SimulatedKill, active_plan
+from repro.obs.spans import Telemetry
 
 METHODS = ("classical", "sstep")
 LAYOUTS = ("serial", "1d", "2d")
@@ -177,6 +178,14 @@ class SolverOptions:
                  representation and serial layout only (the distributed
                  layouts shard instead of stream; low-rank factors are
                  already O(m*l)-small).
+    telemetry:   observability (repro.obs, DESIGN.md §15): a
+                 ``repro.obs.Telemetry`` handle — or True for a fresh
+                 one — records host spans around every fit phase plus
+                 traced marks at the round protocol's sync points, and
+                 lands on ``FitResult.telemetry`` for the audit
+                 (``repro.obs.audit_fit``) and the trace exporter.
+                 None (default) or a DISABLED handle compiles the
+                 exact pre-telemetry round fn — zero added ops.
     """
 
     method: str = "sstep"
@@ -200,8 +209,20 @@ class SolverOptions:
     checkpoint_dir: Optional[str] = None
     fallback: bool = True
     stream: Union[None, bool, int, str] = None
+    telemetry: Union[None, bool, Telemetry] = None
 
     def __post_init__(self):
+        # normalize the telemetry knob (True == fresh handle, False ==
+        # off) and validate it eagerly like every other option
+        if self.telemetry is True:
+            object.__setattr__(self, "telemetry", Telemetry())
+        elif self.telemetry is False:
+            object.__setattr__(self, "telemetry", None)
+        if self.telemetry is not None and \
+                not isinstance(self.telemetry, Telemetry):
+            raise ValueError(f"telemetry must be None, a bool, or a "
+                             f"repro.obs.Telemetry, got "
+                             f"{self.telemetry!r}")
         # normalize the stream knob first (True == "auto", False == off)
         if self.stream is True:
             object.__setattr__(self, "stream", AUTO)
@@ -330,6 +351,12 @@ class FitResult:
                                    # divergence/fallback events,
                                    # checkpoint/resume ledger
                                    # (DESIGN.md §12)
+    telemetry: Optional[Telemetry] = None
+                                   # the recording handle when the fit
+                                   # ran with SolverOptions(telemetry=)
+                                   # — spans/marks/metrics for
+                                   # repro.obs.audit_fit and the trace
+                                   # exporter (DESIGN.md §15)
 
     def metric_history(self) -> Optional[np.ndarray]:
         """The evaluated convergence trajectory — the canonical accessor
@@ -371,6 +398,20 @@ def _check_positive(value: float, name: str) -> float:
     return value
 
 
+def _active_tel(opts: SolverOptions) -> Optional[Telemetry]:
+    """The ENABLED telemetry handle of a fit, or None — a disabled
+    handle maps to None so every traced path compiles mark-free."""
+    t = opts.telemetry
+    return t if (t is not None and t.enabled) else None
+
+
+def _tspan(tel: Optional[Telemetry], name: str, phase: str, **args):
+    """``tel.span(...)`` or a no-op context when telemetry is off."""
+    if tel is None:
+        return contextlib.nullcontext()
+    return tel.span(name, phase, **args)
+
+
 def _as_kernel(kernel: Union[str, KernelConfig, None]) -> KernelConfig:
     if kernel is None:
         return KernelConfig()
@@ -396,10 +437,10 @@ def _resolve_mesh(opts: SolverOptions):
 
 
 @partial(jax.jit, static_argnames=("cfg", "s", "check_every", "slab_free",
-                                   "lowrank"))
+                                   "lowrank", "marks"))
 def _ksvm_serial_tol(A, y, a0, schedule, tol, *, cfg: SVMConfig, s: int,
                      check_every: int, slab_free: bool, op=None,
-                     lowrank: bool = False):
+                     lowrank: bool = False, marks: bool = False):
     gram = None if slab_free else gram_slab
     op = None if gram is not None else op
     if s == 1:
@@ -411,12 +452,15 @@ def _ksvm_serial_tol(A, y, a0, schedule, tol, *, cfg: SVMConfig, s: int,
     # form — the generic oracle would build the m x m gram of Phi
     metric = (ksvm_duality_gap_lowrank if lowrank else ksvm_duality_gap)
     return run_rounds(rf, a0, xs, tol=tol, check_every=check_every,
-                      metric_fn=lambda a: metric(A, y, a, cfg))
+                      metric_fn=lambda a: metric(A, y, a, cfg),
+                      marks=marks)
 
 
-@partial(jax.jit, static_argnames=("cfg", "s", "check_every", "slab_free"))
+@partial(jax.jit, static_argnames=("cfg", "s", "check_every", "slab_free",
+                                   "marks"))
 def _krr_serial_tol(A, y, a0, schedule, tol, *, cfg: KRRConfig, s: int,
-                    check_every: int, slab_free: bool, op=None):
+                    check_every: int, slab_free: bool, op=None,
+                    marks: bool = False):
     gram = None if slab_free else gram_slab
     op = None if gram is not None else op
     if s == 1:
@@ -425,17 +469,20 @@ def _krr_serial_tol(A, y, a0, schedule, tol, *, cfg: KRRConfig, s: int,
         rf = make_sstep_bdcd_round_fn(A, y, cfg, s, gram_fn=gram, op=op)
         xs = pad_rounds(schedule, s)
     return run_rounds(rf, a0, xs, tol=tol, check_every=check_every,
-                      metric_fn=lambda a: krr_rel_residual(A, y, a, cfg))
+                      metric_fn=lambda a: krr_rel_residual(A, y, a, cfg),
+                      marks=marks)
 
 
 @partial(jax.jit, static_argnames=("problem", "cfg", "s", "check_every",
                                    "correct_every", "lowrank",
-                                   "want_metric", "fault_target"))
+                                   "want_metric", "fault_target",
+                                   "marks"))
 def _guarded_serial_chunk(A, y, a0, f0, schedule, tol, fault_round,
                           fault_value, *, problem, cfg, s: int,
                           check_every: int, correct_every: int,
                           lowrank: bool, want_metric: bool,
-                          fault_target: Optional[str] = None, op=None):
+                          fault_target: Optional[str] = None, op=None,
+                          marks: bool = False):
     """One guarded segment (DESIGN.md §12): the guarded round fns over
     the ``(alpha, f)`` carry, driven by the guarded while-loop with
     per-round health checks and periodic residual replacement.  The
@@ -485,7 +532,7 @@ def _guarded_serial_chunk(A, y, a0, f0, schedule, tol, fault_round,
         correct_every=correct_every)
     return run_rounds(rf, (a0, f0), xs, tol=tol, check_every=check_every,
                       metric_fn=metric if want_metric else None,
-                      guard=spec)
+                      guard=spec, marks=marks)
 
 
 def _cast_floating(tree, dtype):
@@ -513,6 +560,7 @@ def _run_guarded_serial(problem, A_s, y, a0, schedule, cfg_s,
     tol = opts.tol if opts.tol > 0.0 else NO_TOL
     lowrank = problem == "ksvm" and bool(opts.approx)
     base_dtype = A_s.dtype
+    tel = _active_tel(opts)
 
     s_cur, method_cur = opts.s_eff, opts.method
     x64 = False
@@ -554,7 +602,8 @@ def _run_guarded_serial(problem, A_s, y, a0, schedule, cfg_s,
         fault_value = plan.value if plan is not None else float("nan")
 
         ctx = enable_x64() if x64 else contextlib.nullcontext()
-        with ctx:
+        with ctx, _tspan(tel, "guarded_segment", "solve", iter_start=pos,
+                         iters=int(seg), s=s_cur):
             res = _guarded_serial_chunk(
                 A_cur, y_cur, alpha, f, sched_seg,
                 jnp.asarray(tol, A_cur.dtype), fault_round, fault_value,
@@ -562,11 +611,19 @@ def _run_guarded_serial(problem, A_s, y, a0, schedule, cfg_s,
                 check_every=opts.check_every,
                 correct_every=opts.recompute_every,
                 lowrank=lowrank, want_metric=want_metric,
-                fault_target=fault_target, op=op_cur)
-        div = int(res.diverged_round)
+                fault_target=fault_target, op=op_cur,
+                marks=tel is not None)
+            # the segment boundary is already a sync point (the host
+            # branches on diverged_round next); syncing INSIDE the span
+            # keeps the measured interval honest
+            div = int(res.diverged_round)
         dh = res.drift_history()
         if dh is not None and len(dh):
             drifts.append(np.asarray(dh, np.float64))
+            if tel is not None:
+                tel.metrics.counter(
+                    "repro_guard_corrections_total",
+                    "residual drift corrections applied").inc(len(dh))
         mh = res.metric_history()
         if mh is not None and len(mh):
             hists.append(np.asarray(mh, np.float64))
@@ -599,6 +656,12 @@ def _run_guarded_serial(problem, A_s, y, a0, schedule, cfg_s,
                 kind=kind, round_idx=rounds_done, iter_idx=pos,
                 action=action,
                 detail=f"resuming from last good state at iter {pos}"))
+            if tel is not None:
+                tel.metrics.counter(
+                    "repro_guard_fallbacks_total",
+                    "escalation-ladder steps taken").inc(
+                        action=action, kind=kind)
+                tel.mark("fallback", phase="guard")
             if x64_new and not x64:
                 x64 = True
                 with enable_x64():
@@ -668,6 +731,7 @@ def _run_guarded_dist(problem, A_s, y, a0, schedule, cfg_s,
     H = schedule.shape[0]
     want_metric = opts.tol > 0.0 or opts.record
     base_dtype = A_s.dtype
+    tel = _active_tel(opts)
     blowup = 1e4
 
     s_cur, method_cur = opts.s_eff, opts.method
@@ -707,14 +771,17 @@ def _run_guarded_dist(problem, A_s, y, a0, schedule, cfg_s,
                 and plan.carry_fault_round(pos, seg, s_cur) >= 0):
             op_factory = poisoned_1d_factory(scale=plan.value)
         ctx = enable_x64() if x64 else contextlib.nullcontext()
-        with ctx:
+        with ctx, _tspan(tel, "guarded_chunk", "solve", iter_start=pos,
+                         iters=int(seg), s=s_cur, layout=opts.layout):
             alpha_new = _dist_chunk(A_cur, y_cur, alpha, sched_seg,
                                     problem=problem, layout=opts.layout,
                                     mesh=mesh, cfg=cfg_s, s=s_cur,
                                     slab_free=opts.slab_free,
                                     op_factory=op_factory)
+            # the finiteness probe is the chunk's existing sync point;
+            # syncing inside the span keeps the interval honest
+            healthy = bool(jnp.all(jnp.isfinite(alpha_new)))
         val = None
-        healthy = bool(jnp.all(jnp.isfinite(alpha_new)))
         kind = KIND_NONFINITE
         if healthy and want_metric:
             val = metric_host(alpha_new)
@@ -743,6 +810,12 @@ def _run_guarded_dist(problem, A_s, y, a0, schedule, cfg_s,
                 kind=kind, round_idx=rounds_done, iter_idx=pos,
                 action=action,
                 detail=f"re-running chunk from iteration {pos}"))
+            if tel is not None:
+                tel.metrics.counter(
+                    "repro_guard_fallbacks_total",
+                    "escalation-ladder steps taken").inc(
+                        action=action, kind=kind)
+                tel.mark("fallback", phase="guard")
             if x64_new and not x64:
                 x64 = True
                 with enable_x64():
@@ -875,6 +948,22 @@ def _solve_cfg(cfg, opts: SolverOptions):
 
 def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
          a0=None, rep=None, resume_from=None):
+    """Telemetry shell around ``_fit_body``: when the fit carries an
+    enabled handle, activate it (the contextvar target of the traced
+    marks) and bracket the whole call in one phase="fit" span — the
+    window obs/audit.py reconciles against the Hockney model."""
+    tel = _active_tel(opts)
+    if tel is None:
+        return _fit_body(problem, A, y, cfg, opts, a0=a0, rep=rep,
+                         resume_from=resume_from)
+    with tel.activate(), tel.span("fit", phase="fit", problem=problem,
+                                  m=int(A.shape[0]), n=int(A.shape[1])):
+        return _fit_body(problem, A, y, cfg, opts, a0=a0, rep=rep,
+                         resume_from=resume_from)
+
+
+def _fit_body(problem: str, A, y, cfg, opts: SolverOptions, *,
+              a0=None, rep=None, resume_from=None):
     m, n = A.shape
 
     plan = None
@@ -906,6 +995,8 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
     s = opts.s_eff
     b = opts.b if problem == "krr" else 1
     key = jax.random.key(opts.seed)
+    # re-resolve after the autotune replace: the handle rides on opts
+    tel = _active_tel(opts)
 
     t0 = time.perf_counter()
     # representation build (inside the clock: it is part of the solve
@@ -913,7 +1004,13 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
     # unless a prebuilt representation is injected (warm-started paths
     # amortize ONE build across the whole ladder)
     if rep is None:
-        rep = _build_representation(A, cfg, opts)
+        with _tspan(tel, "representation_build", "setup",
+                    approx=bool(opts.approx)):
+            rep = _build_representation(A, cfg, opts)
+            # drain the async dispatch inside the span so the setup
+            # phase owns its own cost (not the first solve chunk's)
+            if tel is not None:
+                jax.block_until_ready(rep[1])
     rep_op, A_s = rep
     cfg_s = _solve_cfg(cfg, opts)
     if problem == "ksvm":
@@ -970,19 +1067,29 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
                 problem, A_s, y, a0, schedule, cfg_s, opts, train_op,
                 fingerprint=fp, resume=resume)
         elif not want_metric:
-            alpha = _serial_fast(problem, A_s, y, a0, schedule, cfg_s, s,
-                                 opts.slab_free, op=train_op)
+            # the scan fast path has no sync points — no marks; the
+            # host span still brackets dispatch + completion
+            with _tspan(tel, "solve", "solve", path="fast", s=s):
+                alpha = _serial_fast(problem, A_s, y, a0, schedule,
+                                     cfg_s, s, opts.slab_free,
+                                     op=train_op)
+                if tel is not None:
+                    jax.block_until_ready(alpha)
             rounds_run = -(-H // s)
         else:
             kw = ({"lowrank": bool(opts.approx)} if problem == "ksvm"
                   else {})
             solve = (_ksvm_serial_tol if problem == "ksvm"
                      else _krr_serial_tol)
-            res = solve(A_s, y, a0, schedule, tol, cfg=cfg_s, s=s,
-                        check_every=opts.check_every,
-                        slab_free=opts.slab_free, op=train_op, **kw)
-            alpha = res.state
-            rounds_run = int(res.rounds_run)
+            with _tspan(tel, "solve", "solve", path="tol", s=s):
+                res = solve(A_s, y, a0, schedule, tol, cfg=cfg_s, s=s,
+                            check_every=opts.check_every,
+                            slab_free=opts.slab_free, op=train_op,
+                            marks=tel is not None, **kw)
+                alpha = res.state
+                # rounds_run is the host sync; inside the span so the
+                # measured interval covers the whole while-loop
+                rounds_run = int(res.rounds_run)
             converged = bool(res.converged)
             history = np.asarray(res.metric_history())
         if not opts.guard:
@@ -1004,7 +1111,11 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
                 problem, A_s, y, a0, schedule, cfg_s, opts, mesh,
                 metric_host, fingerprint=fp, resume=resume)
         elif not want_metric:
-            alpha = _dist_chunk(A_s, y, alpha, schedule, **dist_kw)
+            with _tspan(tel, "solve", "solve", path="dist_fast", s=s,
+                        layout=opts.layout):
+                alpha = _dist_chunk(A_s, y, alpha, schedule, **dist_kw)
+                if tel is not None:
+                    jax.block_until_ready(alpha)
             rounds_run, iters_run = -(-H // s), H
         else:
             # chunked early stopping: whole multiples of s per chunk keep
@@ -1013,10 +1124,15 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
             pos, rounds_run, hist = 0, 0, []
             while pos < H:
                 sched_c = schedule[pos:pos + chunk]
-                alpha = _dist_chunk(A_s, y, alpha, sched_c, **dist_kw)
-                pos += sched_c.shape[0]
-                rounds_run += -(-sched_c.shape[0] // s)
-                val = metric_host(alpha)
+                with _tspan(tel, "dist_chunk", "solve", iter_start=pos,
+                            iters=int(sched_c.shape[0]), s=s,
+                            layout=opts.layout):
+                    alpha = _dist_chunk(A_s, y, alpha, sched_c,
+                                        **dist_kw)
+                    pos += sched_c.shape[0]
+                    rounds_run += -(-sched_c.shape[0] // s)
+                    # the metric read is the chunk's existing sync point
+                    val = metric_host(alpha)
                 hist.append(val)
                 if opts.tol > 0.0 and val <= opts.tol:
                     converged = True
@@ -1036,7 +1152,8 @@ def _fit(problem: str, A, y, cfg, opts: SolverOptions, *,
                        converged=converged,
                        rounds_run=rounds_run, iters_run=iters_run,
                        wall_time_s=wall, comm=comm, options=opts,
-                       representation=rep_name, plan=plan, health=health)
+                       representation=rep_name, plan=plan, health=health,
+                       telemetry=tel)
     return result, rep_op
 
 

@@ -121,17 +121,29 @@ class LoopResult(NamedTuple):
     diverged_kind: Optional[jnp.ndarray] = None
 
     def metric_history(self) -> Optional[jnp.ndarray]:
-        """The evaluated prefix ``metric_hist[:checks_run]`` (host-side:
-        forces ``checks_run``).  ``None`` when no metric was recorded.
-        Fleet results slice the same way — the check axis leads."""
+        """The evaluated prefix ``metric_hist[:checks_run]``.
+
+        HOST-SYNC: ``int(self.checks_run)`` blocks on the device value
+        — calling this inside a traced function raises (it is a result
+        accessor, not loop code), and calling it on a freshly returned
+        result synchronizes the dispatch stream.  ``None`` when no
+        metric was recorded (scan mode).  Edge cases: ``checks_run ==
+        0`` (e.g. an empty schedule — the while loop never ran) returns
+        the empty ``(0,)`` slice, not None; fleet results
+        (``run_rounds_fleet``) slice the same way with the check axis
+        leading — shape ``(checks_run, F)``."""
         if self.metric_hist is None:
             return None
         return self.metric_hist[:int(self.checks_run)]
 
     def drift_history(self) -> Optional[jnp.ndarray]:
-        """The evaluated drift prefix ``drift_hist[:corrections]``
-        (host-side); ``None`` when the run was unguarded or had no
-        residual-replacement cadence."""
+        """The evaluated drift prefix ``drift_hist[:corrections]``.
+
+        HOST-SYNC like ``metric_history`` (``int(self.corrections)``
+        blocks).  ``None`` when the run was unguarded or had no
+        residual-replacement cadence (``correct_every == 0`` — the
+        guard then records no drift buffer at all); a guarded run whose
+        cadence never fired returns the empty ``(0,)`` slice."""
         if self.drift_hist is None:
             return None
         return self.drift_hist[:int(self.corrections)]
@@ -157,7 +169,8 @@ def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
                tol: float = NO_TOL, check_every: int = 1,
                metric_fn: Optional[Callable] = None,
                record_state: bool = False,
-               guard: Optional[GuardSpec] = None) -> LoopResult:
+               guard: Optional[GuardSpec] = None,
+               marks: bool = False) -> LoopResult:
     """Drive ``R = len(xs)`` rounds of ``round_fn`` (see module docstring).
 
     xs is a pytree of arrays with a shared leading round axis.  With
@@ -166,6 +179,14 @@ def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
     (pass ``tol=NO_TOL`` to record the metric without ever stopping).
     ``guard`` switches to the guarded while-loop driver (module
     docstring; works with or without a metric).
+
+    ``marks`` (static) threads telemetry marks (repro.obs, DESIGN.md
+    §15) into the EXISTING sync points only — the tolerance-check and
+    drift-correction cond branches of the while-loop drivers; the scan
+    fast path has no sync points and is never instrumented.  With
+    ``marks=False`` (the default) the traced code is byte-identical to
+    the pre-telemetry driver: zero added ops, jaxpr-identical
+    (tests/test_obs.py asserts this).
     """
     R = jax.tree_util.tree_leaves(xs)[0].shape[0]
 
@@ -176,7 +197,8 @@ def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
                              "driver, which stacks no per-round states)")
         return _run_rounds_guarded(round_fn, state0, xs, R, tol=tol,
                                    check_every=check_every,
-                                   metric_fn=metric_fn, guard=guard)
+                                   metric_fn=metric_fn, guard=guard,
+                                   marks=marks)
 
     if metric_fn is None:
         def body(state, x):
@@ -190,6 +212,8 @@ def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
 
     if check_every < 1:
         raise ValueError(f"check_every must be >= 1, got {check_every}")
+    if marks:
+        from repro.obs.spans import span_begin, span_end
     n_checks = -(-R // check_every)
     mdtype = jax.eval_shape(metric_fn, state0).dtype
     hist0 = jnp.full((n_checks,), jnp.inf, mdtype)
@@ -209,7 +233,14 @@ def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
 
         def check(args):
             st, h, n = args
+            if marks:                       # static: absent when False
+                span_begin("metric_check")
             v = metric_fn(st)
+            if marks:
+                # no traced operand on the end mark: shipping the
+                # metric value through the callback roughly doubles
+                # its cost (the value is in hist already)
+                span_end("metric_check")
             return h.at[n].set(v), n + 1, v <= tol_v
 
         def skip(args):
@@ -228,7 +259,8 @@ def run_rounds(round_fn: Callable, state0: Any, xs: Any, *,
 def _run_rounds_guarded(round_fn: Callable, state0: Any, xs: Any, R: int,
                         *, tol: float, check_every: int,
                         metric_fn: Optional[Callable],
-                        guard: GuardSpec) -> LoopResult:
+                        guard: GuardSpec,
+                        marks: bool = False) -> LoopResult:
     """The guarded while-loop driver behind ``run_rounds(guard=...)``.
 
     Divergence handling follows the fleet freeze idiom: the unhealthy
@@ -239,6 +271,8 @@ def _run_rounds_guarded(round_fn: Callable, state0: Any, xs: Any, R: int,
     """
     if check_every < 1:
         raise ValueError(f"check_every must be >= 1, got {check_every}")
+    if marks:
+        from repro.obs.spans import span_begin, span_end
     has_metric = metric_fn is not None
     n_checks = -(-R // check_every) if has_metric else 1
     if has_metric:
@@ -280,7 +314,13 @@ def _run_rounds_guarded(round_fn: Callable, state0: Any, xs: Any, R: int,
 
             def correct(args):
                 st, dh, nc = args
+                if marks:                   # static: absent when False
+                    span_begin("drift_correction")
                 st2, drift = guard.correct_fn(st)
+                if marks:
+                    # operand-free (see metric_check): drift lands in
+                    # dhist / SolveHealth.drift, not the mark
+                    span_end("drift_correction")
                 return st2, dh.at[nc].set(drift), nc + 1
 
             state, dhist, ncorr = jax.lax.cond(
@@ -292,7 +332,11 @@ def _run_rounds_guarded(round_fn: Callable, state0: Any, xs: Any, R: int,
 
             def check(args):
                 st, h, n = args
+                if marks:                   # static: absent when False
+                    span_begin("metric_check")
                 v = metric_fn(st)
+                if marks:
+                    span_end("metric_check")  # operand-free, see above
                 finite = jnp.isfinite(v)
                 blown = jnp.isfinite(best) & (v > blowup * best)
                 return (h.at[n].set(v), n + 1, finite & (v <= tol_v),

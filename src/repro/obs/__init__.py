@@ -1,0 +1,40 @@
+"""repro.obs — unified telemetry (DESIGN.md §15).
+
+* ``spans``   — the ``Telemetry`` handle: host spans + traced marks at
+  the round protocol's existing sync points.
+* ``metrics`` — counters/gauges/histograms with Prometheus/JSON export.
+* ``audit``   — modeled-vs-measured per-phase reconciliation of a fit
+  against ``perf_model.modeled_fit_cost``.
+* ``export``  — Chrome-trace/Perfetto JSON of any recorded window.
+
+CLI: ``python -m repro.obs {report,trace,scrape}``.
+
+Import note: ``core/loop.py`` imports ``obs.spans`` from inside the
+round drivers, so this package __init__ stays dependency-light — the
+audit (which imports ``repro.core.perf_model``) loads lazily via
+module ``__getattr__`` to keep ``repro.core`` -> ``repro.obs`` acyclic.
+"""
+from .metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                      MetricsRegistry, default_registry)
+from .spans import (Mark, Span, Telemetry, active_telemetry,  # noqa: F401
+                    chunk_mark, span_begin, span_end)
+
+_LAZY = {
+    "audit_fit": "audit", "AuditReport": "audit", "PhaseRow": "audit",
+    "to_chrome_trace": "export", "validate_chrome_trace": "export",
+    "save_trace": "export", "load_trace": "export",
+}
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "default_registry", "Mark", "Span", "Telemetry",
+           "active_telemetry", "chunk_mark", "span_begin", "span_end",
+           *_LAZY]
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.obs' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

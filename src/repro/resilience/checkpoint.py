@@ -168,11 +168,18 @@ def save_fit(directory: str, result, op=None, step: int = 0) -> str:
     """Persist a completed ``FitResult`` (+ optionally its operator).
 
     Arrays travel as checkpoint leaves; host scalars, the resolved
-    ``SolverOptions`` and the comm model go to JSON meta.  ``plan`` and
-    ``health`` are session objects and are not persisted."""
+    ``SolverOptions`` and the comm model go to JSON meta.  The guard's
+    ``SolveHealth`` ledger round-trips too (drift as an array leaf,
+    events/scalars as meta) — a restored fit keeps its provenance.
+    ``plan`` (a live tuning session) and ``telemetry`` (an open
+    recording handle) are session objects and are NOT persisted."""
     arrays = {"alpha": result.alpha, "schedule": result.schedule}
     if result.history is not None:
         arrays["history"] = np.asarray(result.history)
+    health = getattr(result, "health", None)
+    if health is not None:
+        arrays["health_drift"] = (np.zeros(0) if health.drift is None
+                                  else np.asarray(health.drift))
     tree = {"arrays": arrays}
     if op is not None:
         tree["op"] = op
@@ -186,13 +193,25 @@ def save_fit(directory: str, result, op=None, step: int = 0) -> str:
         # echoes like approx (possibly None) — all JSON-native already
         "comm": {k: (float(v) if isinstance(v, float) else v)
                  for k, v in result.comm.items()},
-        # a live Mesh is a device handle, not state — resumable options
-        # rebuild the auto mesh on the restoring host
-        "options": {**dataclasses.asdict(result.options), "mesh": None},
+        # a live Mesh is a device handle and a live Telemetry an open
+        # log, not state — resumable options rebuild/re-enable on the
+        # restoring host
+        "options": {**dataclasses.asdict(result.options), "mesh": None,
+                    "telemetry": None},
         "representation": result.representation,
         "has_history": result.history is not None,
         "has_op": op is not None,
+        "has_health": health is not None,
     }
+    if health is not None:
+        meta["health"] = {
+            "guarded": bool(health.guarded),
+            "recompute_every": int(health.recompute_every),
+            "corrections": int(health.corrections),
+            "checkpoints": int(health.checkpoints),
+            "resumed_from": health.resumed_from,
+            "events": [dataclasses.asdict(e) for e in health.events],
+        }
     if op is not None:
         meta["op_meta"] = operator_meta(op)
     return save_checkpoint(directory, step, tree, extra={"fit": meta})
@@ -221,6 +240,8 @@ def load_fit(directory: str, op_template: Any = None, step: int = 0):
     arrays = {"alpha": 0, "schedule": 0}
     if fit["has_history"]:
         arrays["history"] = 0
+    if fit.get("has_health"):
+        arrays["health_drift"] = 0
     template = {"arrays": arrays}
     if fit["has_op"]:
         if op_template is None and "op_meta" in fit:
@@ -232,6 +253,18 @@ def load_fit(directory: str, op_template: Any = None, step: int = 0):
         template["op"] = op_template
     tree, _ = load_checkpoint(directory, step=step, template=template)
     arrs = tree["arrays"]
+    health = None
+    if fit.get("has_health"):
+        from repro.resilience.health import HealthEvent, SolveHealth
+        h = fit["health"]
+        health = SolveHealth(
+            guarded=h["guarded"],
+            recompute_every=h["recompute_every"],
+            drift=np.asarray(arrs["health_drift"]),
+            corrections=h["corrections"],
+            events=tuple(HealthEvent(**e) for e in h["events"]),
+            checkpoints=h["checkpoints"],
+            resumed_from=h["resumed_from"])
     result = FitResult(
         alpha=jnp.asarray(arrs["alpha"]),
         schedule=jnp.asarray(arrs["schedule"]),
@@ -241,5 +274,5 @@ def load_fit(directory: str, op_template: Any = None, step: int = 0):
         rounds_run=fit["rounds_run"], iters_run=fit["iters_run"],
         wall_time_s=fit["wall_time_s"], comm=fit["comm"],
         options=SolverOptions(**fit["options"]),
-        representation=fit["representation"])
+        representation=fit["representation"], health=health)
     return result, tree.get("op")

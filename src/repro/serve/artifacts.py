@@ -142,7 +142,8 @@ def save_model(directory: str, model, *, step: int = 0) -> str:
         "version": MANIFEST_VERSION,
         "problem": model.problem,
         "cfg": _cfg_meta(model.cfg),
-        "options": {**dataclasses.asdict(model.options), "mesh": None},
+        "options": {**dataclasses.asdict(model.options), "mesh": None,
+                    "telemetry": None},
         "op_meta": operator_meta(model.op),
         "has_A_raw": model.A_raw is not None,
         "fingerprint": model.fingerprint,

@@ -101,11 +101,19 @@ class ServingEngine:
     construction.  ``max_queue`` bounds WAITING tickets across all
     models; ``clock`` supplies time (injectable for virtual-time
     benchmarking).
+
+    ``telemetry`` (repro.obs, DESIGN.md §15) hangs serving metrics off
+    the shared registry: queue depth (gauge), ticket dispositions
+    (counter, labelled by status), batch occupancy (histogram of
+    admitted-rows/slots per block) and submit-to-done latency
+    (histogram); ``step`` additionally records one phase="serve" host
+    span.  A None/disabled handle costs nothing on the hot path.
     """
 
     def __init__(self, registry: ModelRegistry, *, slots: int = 256,
                  max_queue: int = 1024,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 telemetry=None):
         if not isinstance(slots, int) or slots < 1:
             raise ValueError(f"slots must be a positive int, got {slots!r}")
         if not isinstance(max_queue, int) or max_queue < 1:
@@ -122,6 +130,32 @@ class ServingEngine:
             "submitted": 0, "served": 0, "shed": 0, "expired": 0,
             "steps": 0, "blocks": 0}
         self._latencies: List[float] = []
+        self._tel = (telemetry if telemetry is not None
+                     and telemetry.enabled else None)
+        if self._tel is not None:
+            reg = self._tel.metrics
+            self._m_depth = reg.gauge(
+                "repro_serve_queue_depth", "tickets waiting in the "
+                "bounded queue")
+            self._m_tickets = reg.counter(
+                "repro_serve_tickets_total", "ticket dispositions, "
+                "labelled by terminal status")
+            self._m_occupancy = reg.histogram(
+                "repro_serve_batch_occupancy",
+                "admitted rows / slots per served block",
+                buckets=(0.125, 0.25, 0.5, 0.75, 0.9, 1.0))
+            self._m_latency = reg.histogram(
+                "repro_serve_ticket_latency_seconds",
+                "submit-to-done latency (engine clock units)",
+                buckets=(1e-4, 1e-3, 5e-3, 1e-2, 5e-2, 0.1, 0.5,
+                         1.0, 5.0))
+            # label keys resolved once; submit/done fire per ticket
+            self._t_submitted = self._m_tickets.labels(
+                status="submitted")
+            self._t_shed = self._m_tickets.labels(status=SHED)
+            self._t_expired = self._m_tickets.labels(status=EXPIRED)
+            self._t_done = self._m_tickets.labels(status=DONE)
+            self._g_depth = self._m_depth.labels()
 
     # -- admission ------------------------------------------------------
 
@@ -145,11 +179,17 @@ class ServingEngine:
                                   else now + deadline_s))
         self._next_id += 1
         self.stats["submitted"] += 1
+        if self._tel is not None:
+            self._t_submitted.inc()
         if len(self._queue) >= self.max_queue:
             ticket.status = SHED
             self.stats["shed"] += 1
+            if self._tel is not None:
+                self._t_shed.inc()
             return ticket
         self._queue.append(ticket)
+        if self._tel is not None:
+            self._g_depth.set(len(self._queue))
         return ticket
 
     @property
@@ -172,6 +212,15 @@ class ServingEngine:
         top: a refit swap that lands mid-step is picked up next step
         (tickets already admitted finish on the group snapshot they
         were batched against — never a mix)."""
+        if self._tel is None:
+            return self._step()
+        with self._tel.span("engine_step", "serve",
+                            pending=len(self._queue)):
+            served = self._step()
+        self._g_depth.set(len(self._queue))
+        return served
+
+    def _step(self) -> int:
         self.stats["steps"] += 1
         if self._generation != self.registry.generation:
             self._generation = self.registry.generation
@@ -181,6 +230,8 @@ class ServingEngine:
             if t.deadline is not None and now > t.deadline:
                 t.status = EXPIRED
                 self.stats["expired"] += 1
+                if self._tel is not None:
+                    self._t_expired.inc()
             else:
                 survivors.append(t)
         self._queue = survivors
@@ -232,8 +283,13 @@ class ServingEngine:
                 t.t_done = t_done
                 self._latencies.append(t.latency)
                 served += t.rows
+                if self._tel is not None:
+                    self._t_done.inc()
+                    self._m_latency.observe(t.latency)
             self.stats["served"] += len(tickets)
             self.stats["blocks"] += 1
+            if self._tel is not None:
+                self._m_occupancy.observe(q / self.slots)
         return served
 
     def run_until_idle(self, *, max_steps: int = 10_000) -> int:

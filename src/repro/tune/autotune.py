@@ -209,11 +209,17 @@ def _probe(A, y, cfg, opts, problem, candidates):
     """Measured refinement: run ``opts.probe`` outer rounds of each top
     candidate through the real facade solver (budget stopping, no
     metric) twice — the first call pays compile, the second is the
-    measurement — and report wall seconds."""
-    from repro.api import _fit
+    measurement — and report wall seconds.
+
+    Probe fits run with ``telemetry=None`` — their spans/marks belong
+    to the tuner, not the fit being tuned; the PARENT handle (when the
+    tuned fit carries one) records each probe as a counter bump and a
+    wall-seconds histogram sample instead."""
+    from repro.api import _fit, _active_tel
 
     from repro.api import AUTO
 
+    tel = _active_tel(opts)
     rows = []
     for cand in candidates:
         s_eff = cand["s"] if opts.method == "sstep" else 1
@@ -225,9 +231,19 @@ def _probe(A, y, cfg, opts, problem, candidates):
         probe_opts = dataclasses.replace(
             opts, s=cand["s"], b=cand["b"], layout=cand["layout"],
             approx=cand["approx"], tol=0.0, record=False, probe=0,
-            stream=stream, max_iters=max(opts.probe * s_eff, 1))
+            stream=stream, max_iters=max(opts.probe * s_eff, 1),
+            telemetry=None)
         _fit(problem, A, y, cfg, probe_opts)         # compile + warm
         t0 = time.perf_counter()
         _fit(problem, A, y, cfg, probe_opts)
-        rows.append(dict(cand, measured_s=time.perf_counter() - t0))
+        dt = time.perf_counter() - t0
+        rows.append(dict(cand, measured_s=dt))
+        if tel is not None:
+            tel.metrics.counter(
+                "repro_autotune_probes_total",
+                "measured autotune probes run").inc(
+                    layout=cand["layout"])
+            tel.metrics.histogram(
+                "repro_autotune_probe_seconds",
+                "measured wall seconds per probe fit").observe(dt)
     return rows

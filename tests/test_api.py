@@ -245,3 +245,88 @@ def test_fit_result_comm_model_scales_with_s(krr_data):
     assert fits["sstep"].wall_time_s > 0.0
     for fr in fits.values():
         assert {"flops", "words", "msgs", "time"} <= set(fr.comm)
+
+
+# ---------------------------------------------------------------------------
+# LoopResult accessor edge cases (DESIGN.md §8: host-sync accessors)
+# ---------------------------------------------------------------------------
+
+class TestLoopResultAccessors:
+    """metric_history()/drift_history() edge cases: empty schedules,
+    fleet shapes, and the unguarded/no-cadence distinction."""
+
+    def _round_fn(self):
+        return lambda a, x: 0.5 * a
+
+    def test_check_cadence_beyond_budget_final_check_fires(self):
+        """A check cadence beyond the round budget still runs exactly
+        one check — the driver forces a final-round check so converged
+        is never stale — and metric_history() is the (1,) slice of the
+        recorded buffer."""
+        from repro.core.loop import run_rounds
+        res = run_rounds(self._round_fn(), jnp.ones(4),
+                         jnp.zeros((8,), jnp.int32), tol=1e-6,
+                         check_every=100,
+                         metric_fn=lambda a: jnp.linalg.norm(a))
+        assert int(res.checks_run) == 1
+        hist = res.metric_history()
+        assert hist is not None and hist.shape == (1,)
+        assert np.isfinite(np.asarray(hist)).all()
+
+    def test_scan_mode_history_is_none(self):
+        from repro.core.loop import run_rounds
+        res = run_rounds(self._round_fn(), jnp.ones(4),
+                         jnp.zeros((8,), jnp.int32))
+        assert res.metric_history() is None
+        assert res.drift_history() is None
+
+    def test_fleet_history_shape(self):
+        """run_rounds_fleet records (n_checks, F); metric_history()
+        slices the leading check axis and keeps F."""
+        from repro.core.loop import NO_TOL, run_rounds_fleet
+        F, m = 3, 4
+        state0 = jnp.ones((F, m))
+        res = run_rounds_fleet(
+            lambda a, x: 0.5 * a, state0, jnp.zeros((8,), jnp.int32),
+            tol=NO_TOL, check_every=2,
+            metric_fn=lambda a: jnp.linalg.norm(a, axis=1))
+        hist = res.metric_history()
+        assert hist.shape == (int(res.checks_run), F)
+        assert int(res.checks_run) == 4
+        assert res.converged.shape == (F,)
+
+    def test_drift_history_unguarded_is_none(self):
+        from repro.core.loop import run_rounds
+        res = run_rounds(self._round_fn(), jnp.ones(4),
+                         jnp.zeros((8,), jnp.int32), tol=1e-30,
+                         metric_fn=lambda a: jnp.linalg.norm(a))
+        assert res.drift_history() is None
+
+    def test_drift_history_no_cadence_is_none(self):
+        """guard= with correct_every=0 records no drift buffer at all:
+        drift_history() is None (distinct from an empty slice)."""
+        from repro.core.loop import GuardSpec, run_rounds
+        guard = GuardSpec(
+            health_fn=lambda a: jnp.all(jnp.isfinite(a)))
+        res = run_rounds(self._round_fn(), jnp.ones(4),
+                         jnp.zeros((8,), jnp.int32), tol=1e-30,
+                         metric_fn=lambda a: jnp.linalg.norm(a),
+                         guard=guard)
+        assert res.drift_history() is None
+        assert int(res.diverged_round) == -1
+
+    def test_drift_history_cadence_never_fired_is_empty(self):
+        """A guarded run whose cadence exceeds the round budget returns
+        the empty (0,) slice — the buffer exists, nothing was
+        recorded."""
+        from repro.core.loop import GuardSpec, run_rounds
+        guard = GuardSpec(
+            health_fn=lambda a: jnp.all(jnp.isfinite(a)),
+            correct_fn=lambda a: (a, jnp.asarray(0.0)),
+            correct_every=100)
+        res = run_rounds(self._round_fn(), jnp.ones(4),
+                         jnp.zeros((8,), jnp.int32), tol=1e-30,
+                         metric_fn=lambda a: jnp.linalg.norm(a),
+                         guard=guard)
+        drift = res.drift_history()
+        assert drift is not None and drift.shape == (0,)

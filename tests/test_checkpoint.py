@@ -143,6 +143,43 @@ def test_save_fit_load_fit_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(op2.A), np.asarray(A))
 
 
+def test_save_fit_persists_health(tmp_path):
+    """Regression: a guarded fit's SolveHealth ledger (drift array,
+    events, scalars) survives save_fit/load_fit — it used to be dropped
+    as a session object."""
+    from repro.api import KernelRidge, SolverOptions
+    from repro.resilience.checkpoint import load_fit, save_fit
+    rng = np.random.default_rng(2)
+    A = jnp.asarray(rng.standard_normal((48, 4)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(48), jnp.float32)
+    kr = KernelRidge(lam=0.5, kernel="rbf",
+                     options=SolverOptions(method="sstep", s=4, b=4,
+                                           tol=1e-10, check_every=4,
+                                           max_iters=64, guard=True,
+                                           recompute_every=4))
+    res = kr.fit(A, y)
+    assert res.health is not None and res.health.guarded
+    save_fit(str(tmp_path), res, op=kr.op_)
+    res2, _ = load_fit(str(tmp_path), op_template=kr.op_)
+    h, h2 = res.health, res2.health
+    assert h2 is not None and h2.guarded
+    assert h2.recompute_every == h.recompute_every
+    assert h2.corrections == h.corrections
+    np.testing.assert_array_equal(np.asarray(h.drift),
+                                  np.asarray(h2.drift))
+    assert h2.events == h.events
+    assert h2.checkpoints == h.checkpoints
+    assert h2.resumed_from == h.resumed_from
+    assert h2.max_drift == h.max_drift
+    # an unguarded fit still round-trips with health=None
+    kr2 = KernelRidge(lam=0.5, kernel="linear",
+                      options=SolverOptions(max_iters=16))
+    res3 = kr2.fit(A, y)
+    save_fit(str(tmp_path / "plain"), res3, op=kr2.op_)
+    res4, _ = load_fit(str(tmp_path / "plain"), op_template=kr2.op_)
+    assert res4.health is None
+
+
 def test_solve_state_fingerprint_mismatch(tmp_path):
     """load_solve_state refuses a checkpoint from a different solve and
     names the mismatched fingerprint fields."""

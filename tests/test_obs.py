@@ -1,0 +1,387 @@
+"""repro.obs tests: metrics registry semantics, span/mark recording,
+zero-cost-when-disabled (jaxpr identity), end-to-end instrumented fits,
+the modeled-vs-measured audit, Chrome-trace export, serving metrics,
+and the CLI (DESIGN.md §15)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import KernelRidge, SolverOptions
+from repro.obs import (MetricsRegistry, Telemetry, active_telemetry,
+                       default_registry)
+from repro.obs.audit import audit_fit
+from repro.obs.export import (load_trace, save_trace, to_chrome_trace,
+                              validate_chrome_trace)
+
+
+def _problem(m=48, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    y = jnp.asarray(np.asarray(A) @ rng.standard_normal(n), jnp.float32)
+    return A, y
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_counter_inc_and_labels(self):
+        reg = MetricsRegistry()
+        c = reg.counter("requests_total", "total requests")
+        c.inc()
+        c.inc(2.0, route="a")
+        c.inc(route="a")
+        assert c.value() == 1.0
+        assert c.value(route="a") == 3.0
+
+    def test_counter_rejects_decrease(self):
+        c = MetricsRegistry().counter("x_total")
+        with pytest.raises(ValueError, match="cannot decrease"):
+            c.inc(-1.0)
+
+    def test_gauge_set_and_negative_inc(self):
+        g = MetricsRegistry().gauge("depth")
+        g.set(5.0)
+        g.inc(-2.0)
+        assert g.value() == 3.0
+
+    def test_histogram_quantile_and_overflow(self):
+        h = MetricsRegistry().histogram("lat", buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 0.7, 5.0):   # 5.0 lands in +Inf overflow
+            h.observe(v)
+        q50 = h.quantile(0.5)
+        assert 0.1 <= q50 <= 1.0
+        with pytest.raises(ValueError, match="quantile"):
+            h.quantile(1.5)
+
+    def test_histogram_empty_quantile_nan(self):
+        h = MetricsRegistry().histogram("lat2", buckets=(1.0,))
+        assert np.isnan(h.quantile(0.5))
+
+    def test_kind_clash_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("thing")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.gauge("thing")
+        # same kind + name returns the same instrument
+        assert reg.counter("thing") is reg.counter("thing")
+
+    def test_bound_labels_fast_path(self):
+        reg = MetricsRegistry()
+        c = reg.counter("t_total")
+        done = c.labels(status="done")
+        done.inc()
+        done.inc(2.0)
+        assert c.value(status="done") == 3.0
+        with pytest.raises(ValueError, match="cannot decrease"):
+            done.inc(-1.0)
+        with pytest.raises(TypeError, match="no set"):
+            done.set(5.0)
+        g = reg.gauge("d")
+        bound = g.labels()
+        bound.set(4.0)
+        bound.inc(-1.0)
+        assert g.value() == 3.0
+
+    def test_prometheus_text_shape(self):
+        reg = MetricsRegistry()
+        reg.counter("c_total", "a counter").inc(status="ok")
+        reg.gauge("g", "a gauge").set(2.5)
+        reg.histogram("h_seconds", "a histogram",
+                      buckets=(0.1, 1.0)).observe(0.5)
+        text = reg.to_prometheus_text()
+        assert "# HELP c_total a counter" in text
+        assert "# TYPE c_total counter" in text
+        assert 'c_total{status="ok"} 1' in text
+        assert "# TYPE h_seconds histogram" in text
+        assert 'h_seconds_bucket{le="+Inf"} 1' in text
+        assert "h_seconds_sum" in text and "h_seconds_count 1" in text
+        # json round-trips
+        payload = json.loads(reg.to_json())
+        assert set(payload) == {"c_total", "g", "h_seconds"}
+        assert payload["c_total"]["kind"] == "counter"
+        assert payload["h_seconds"]["values"]["count"] == 1
+
+    def test_default_registry_is_process_singleton(self):
+        assert default_registry() is default_registry()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry spans, marks, activation
+# ---------------------------------------------------------------------------
+
+class TestTelemetry:
+    def test_span_and_mark_recording(self):
+        tel = Telemetry()
+        with tel.span("build", "setup", m=8):
+            tel.mark("seam", phase="solve", value=3.0)
+        assert len(tel.spans) == 1 and len(tel.marks) == 1
+        sp = tel.spans[0]
+        assert sp.name == "build" and sp.phase == "setup"
+        assert sp.duration >= 0 and sp.args == {"m": 8}
+        assert tel.marks[0].value == 3.0
+        lo, hi = tel.window()
+        assert lo <= hi
+        tel.clear()
+        assert tel.spans == [] and tel.marks == []
+        assert tel.window() is None
+
+    def test_disabled_handle_records_nothing(self):
+        tel = Telemetry(enabled=False)
+        with tel.span("x"):
+            tel.mark("y")
+        assert tel.spans == [] and tel.marks == []
+        with tel.activate():
+            # disabled handles activate as None: callbacks stay silent
+            assert active_telemetry() is None
+
+    def test_activation_nests_and_restores(self):
+        a, b = Telemetry(), Telemetry()
+        assert active_telemetry() is None
+        with a.activate():
+            assert active_telemetry() is a
+            with b.activate():
+                assert active_telemetry() is b
+            assert active_telemetry() is a
+        assert active_telemetry() is None
+
+    def test_paired_marks_lifo_and_unmatched_dropped(self):
+        from repro.obs.spans import Mark
+        tel = Telemetry()
+        tel.marks = [Mark("a", "round", 1.0, "B"),
+                     Mark("a", "round", 2.0, "B"),
+                     Mark("a", "round", 3.0, "E", value=7.0),
+                     Mark("b", "round", 4.0, "B"),   # never closed
+                     Mark("a", "round", 5.0, "E")]
+        pairs = tel.paired_marks()
+        assert [(p.t0, p.t1) for p in pairs] == [(2.0, 3.0), (1.0, 5.0)]
+        assert pairs[0].args == {"value": 7.0}
+        assert all(p.name == "a" for p in pairs)
+
+    def test_traced_marks_recorded_under_jit(self):
+        from repro.obs.spans import chunk_mark, span_begin, span_end
+
+        @jax.jit
+        def f(x):
+            span_begin("seg")
+            y = x * 2.0
+            chunk_mark("seam", value=jnp.sum(y))
+            span_end("seg")
+            return y
+
+        tel = Telemetry()
+        with tel.activate():
+            jax.block_until_ready(f(jnp.ones(4)))
+        kinds = sorted(m.kind for m in tel.marks)
+        assert kinds == ["B", "E", "i"]
+        seam = [m for m in tel.marks if m.name == "seam"][0]
+        assert seam.value == 8.0
+        assert len(tel.paired_marks()) == 1
+
+    def test_no_active_handle_is_silent(self):
+        from repro.obs.spans import chunk_mark
+
+        @jax.jit
+        def f(x):
+            chunk_mark("quiet")
+            return x + 1
+
+        jax.block_until_ready(f(jnp.zeros(2)))   # must not raise
+
+
+# ---------------------------------------------------------------------------
+# zero ops when disabled (the acceptance bar: jaxpr-identical)
+# ---------------------------------------------------------------------------
+
+class TestZeroCostDisabled:
+    def _jaxpr(self, marks):
+        from repro.api import _krr_serial_tol
+        from repro.core.bdcd import KRRConfig
+        from repro.core.kernels import KernelConfig
+        cfg = KRRConfig(lam=1.0, kernel=KernelConfig("rbf", sigma=1.0))
+        A = jnp.ones((16, 3))
+        y = jnp.ones(16)
+        a0 = jnp.zeros(16)
+        sched = jnp.zeros((8, 4), jnp.int32)
+        return str(jax.make_jaxpr(
+            lambda A, y, a0, sched: _krr_serial_tol(
+                A, y, a0, sched, 1e-6, cfg=cfg, s=4, check_every=2,
+                slab_free=False, marks=marks))(A, y, a0, sched))
+
+    def test_marks_off_has_no_callback_and_is_deterministic(self):
+        off1, off2 = self._jaxpr(False), self._jaxpr(False)
+        assert off1 == off2
+        assert "callback" not in off1
+
+    def test_marks_on_adds_only_callbacks(self):
+        on = self._jaxpr(True)
+        assert "callback" in on
+
+
+# ---------------------------------------------------------------------------
+# instrumented fits end to end
+# ---------------------------------------------------------------------------
+
+class TestInstrumentedFit:
+    def _fit(self, tel, **opt_kw):
+        A, y = _problem()
+        kw = dict(method="sstep", s=4, b=4, tol=1e-10, check_every=4,
+                  max_iters=64, telemetry=tel)
+        kw.update(opt_kw)
+        kr = KernelRidge(lam=0.5, kernel="rbf",
+                         options=SolverOptions(**kw))
+        return kr.fit(A, y)
+
+    def test_fit_records_spans_and_result_carries_handle(self):
+        tel = Telemetry()
+        res = self._fit(tel)
+        assert res.telemetry is tel
+        phases = {s.phase for s in tel.spans}
+        assert {"setup", "solve", "fit"} <= phases
+        names = [s.name for s in tel.spans]
+        assert "representation_build" in names and "fit" in names
+        # the tolerance path fired traced metric-check marks
+        assert any(m.name == "metric_check" for m in tel.marks)
+        assert len(tel.paired_marks()) >= 1
+
+    def test_guarded_fit_counts_corrections(self):
+        tel = Telemetry()
+        self._fit(tel, guard=True, recompute_every=4)
+        c = tel.metrics.counter("repro_guard_corrections_total")
+        assert c.value() >= 1
+        assert any(m.name == "drift_correction" for m in tel.marks)
+
+    def test_no_telemetry_fit_unchanged(self):
+        res = self._fit(None)
+        assert res.telemetry is None
+
+    def test_audit_reconciles_instrumented_fit(self):
+        tel = Telemetry()
+        res = self._fit(tel, guard=True, recompute_every=4)
+        report = audit_fit(res)
+        assert report.rows
+        names = {r.phase for r in report.rows}
+        assert {"setup", "compute", "check"} <= names
+        assert report.measured_total_s > 0
+        d = report.to_dict()
+        assert set(d) >= {"rows", "ratio", "tol", "flagged"}
+        assert "phase" in report.render()
+
+    def test_audit_requires_telemetry(self):
+        res = self._fit(None)
+        with pytest.raises(ValueError, match="telemetry"):
+            audit_fit(res)
+
+
+# ---------------------------------------------------------------------------
+# trace export
+# ---------------------------------------------------------------------------
+
+class TestTraceExport:
+    def _recorded(self):
+        tel = Telemetry()
+        res = self._res = KernelRidge(
+            lam=0.5, kernel="rbf",
+            options=SolverOptions(method="sstep", s=4, b=4, tol=1e-10,
+                                  check_every=4, max_iters=32,
+                                  telemetry=tel)).fit(*_problem())
+        return res.telemetry
+
+    def test_chrome_trace_schema(self, tmp_path):
+        tel = self._recorded()
+        trace = to_chrome_trace(tel)
+        validate_chrome_trace(trace)          # must not raise
+        evs = trace["traceEvents"]
+        assert any(e["ph"] == "X" for e in evs)
+        assert all({"name", "ph", "ts", "pid", "tid"} <= set(e)
+                   for e in evs if e["ph"] != "M")
+        path = save_trace(str(tmp_path / "t.json"), tel)
+        back = load_trace(path)
+        assert len(back["traceEvents"]) == len(evs)
+
+    def test_validate_rejects_bad_traces(self):
+        with pytest.raises(ValueError):
+            validate_chrome_trace({})
+        with pytest.raises(ValueError):
+            validate_chrome_trace({"traceEvents": [
+                {"name": "x", "ph": "Q", "ts": 0.0, "pid": 1,
+                 "tid": 1}]})
+        with pytest.raises(ValueError):
+            validate_chrome_trace({"traceEvents": [
+                {"name": "x", "ph": "X", "ts": -1.0, "dur": 1.0,
+                 "pid": 1, "tid": 1}]})
+        with pytest.raises(ValueError):   # unbalanced B without E
+            validate_chrome_trace({"traceEvents": [
+                {"name": "x", "ph": "B", "ts": 0.0, "pid": 1,
+                 "tid": 1}]})
+
+
+# ---------------------------------------------------------------------------
+# serving metrics
+# ---------------------------------------------------------------------------
+
+class TestServeMetrics:
+    def test_engine_instruments(self):
+        from repro.serve import ModelRegistry, ServingEngine
+        A, y = _problem(m=32)
+        kr = KernelRidge(lam=0.5, kernel="rbf",
+                         options=SolverOptions(method="sstep", s=4, b=4,
+                                               max_iters=32))
+        kr.fit(A, y)
+        reg = ModelRegistry(predict_batch=8)
+        reg.register("krr", kr)
+        tel = Telemetry()
+        eng = ServingEngine(reg, slots=8, telemetry=tel)
+        Q = np.asarray(_problem(m=16)[0])
+        for i in range(16):
+            eng.submit("krr", Q[i][None, :])
+        eng.run_until_idle()
+        c = tel.metrics.counter("repro_serve_tickets_total")
+        assert c.value(status="submitted") == 16
+        assert c.value(status="done") == 16
+        occ = tel.metrics.histogram("repro_serve_batch_occupancy")
+        assert occ.quantile(0.5) > 0
+        lat = tel.metrics.histogram("repro_serve_ticket_latency_seconds")
+        assert not np.isnan(lat.quantile(0.5))
+        assert any(s.name == "engine_step" for s in tel.spans)
+        text = tel.metrics.to_prometheus_text()
+        assert "repro_serve_queue_depth" in text
+
+    def test_engine_without_telemetry_unchanged(self):
+        from repro.serve import ModelRegistry, ServingEngine
+        A, y = _problem(m=32)
+        kr = KernelRidge(lam=0.5, kernel="linear",
+                         options=SolverOptions(max_iters=16))
+        kr.fit(A, y)
+        reg = ModelRegistry(predict_batch=8)
+        reg.register("krr", kr)
+        eng = ServingEngine(reg, slots=8)
+        eng.submit("krr", np.asarray(A[:1]))
+        assert eng.run_until_idle() >= 1
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+class TestCLI:
+    def test_report(self, capsys):
+        from repro.obs.__main__ import main
+        assert main(["report", "--m", "48", "--iters", "32"]) == 0
+        out = capsys.readouterr().out
+        assert "phase" in out and "ratio" in out
+
+    def test_trace_and_scrape(self, tmp_path, capsys):
+        from repro.obs.__main__ import main
+        out_path = tmp_path / "t.json"
+        assert main(["trace", "--m", "48", "--iters", "32",
+                     "--out", str(out_path)]) == 0
+        validate_chrome_trace(json.loads(out_path.read_text()))
+        assert main(["scrape", "--m", "48", "--iters", "32",
+                     "--tickets", "8"]) == 0
+        out = capsys.readouterr().out
+        assert "repro_serve_tickets_total" in out
